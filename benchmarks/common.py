@@ -1,0 +1,67 @@
+"""Shared benchmark infrastructure: graph suite + timing + CSV emit.
+
+The paper evaluates on 18 SNAP/NetworkRepository graphs. This container is
+offline, so the suite generates synthetic stand-ins from the same structural
+regimes (see repro/graph/generators.py). Claim validation targets the
+paper's *relative* behaviour (speedups > 1, call ratios ≪ 1, road graphs
+fully reduced, delaunay-like untouched), not absolute wall-times of a C++
+binary on different hardware.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+from repro.graph import generators as gen
+from repro.graph.csr import CSRGraph
+
+# name -> (constructor, paper-regime analogue)
+GRAPH_SUITE: List[Tuple[str, Callable[[], CSRGraph], str]] = [
+    ("road_grid", lambda: gen.grid_road(45, 0.1, seed=1),
+     "inf-road-usa / roadNet-CA (degeneracy ≤ 2, fully reducible)"),
+    ("rgg_delaunay", lambda: gen.random_geometric(3000, seed=2),
+     "sc-delaunay_n23 (proximity, min degree > 2)"),
+    ("ba_web", lambda: gen.barabasi_albert(3000, 5, seed=3),
+     "web-Google / as-skitter (power law)"),
+    ("ba_dense", lambda: gen.barabasi_albert(1500, 12, seed=4),
+     "soc-pokec (denser power law)"),
+    ("er_sparse", lambda: gen.erdos_renyi(2500, 0.004, seed=5),
+     "email-EuAll (sparse uniform)"),
+    ("kron_social", lambda: gen.kronecker(11, 8, seed=6),
+     "com-youtube / com-orkut (RMAT heavy tail)"),
+    ("caveman_comm", lambda: gen.caveman(60, 8, 0.12, seed=7),
+     "com-dblp (community cliques)"),
+    ("moon_moser_12", lambda: gen.moon_moser(12),
+     "worst case 3^{n/3} cliques"),
+]
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw) -> Tuple[float, object]:
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+class Csv:
+    def __init__(self, header: List[str]):
+        self.header = header
+        self.rows: List[List] = []
+
+    def add(self, *row) -> None:
+        self.rows.append(list(row))
+
+    def dump(self, title: str) -> str:
+        out = [f"# {title}", ",".join(self.header)]
+        for r in self.rows:
+            out.append(",".join(_fmt(x) for x in r))
+        return "\n".join(out) + "\n"
+
+
+def _fmt(x) -> str:
+    if isinstance(x, float):
+        return f"{x:.4g}"
+    return str(x)

@@ -1,0 +1,23 @@
+"""Paper Fig 8: global reduction deletion ratios (vertices & edges)."""
+from __future__ import annotations
+
+from benchmarks.common import GRAPH_SUITE, Csv
+from repro.core.global_reduction import global_reduce_host
+
+
+def main(fast: bool = False) -> str:
+    csv = Csv(["graph", "n", "m", "v_deleted_ratio", "e_deleted_ratio",
+               "pre_reported_cliques", "regime"])
+    for name, make, regime in GRAPH_SUITE:
+        g = make()
+        red = global_reduce_host(g)
+        csv.add(name, g.n, g.m,
+                red.num_deleted_vertices / max(g.n, 1),
+                red.num_deleted_edges / max(g.m, 1),
+                len(red.reported), regime.split("(")[0].strip())
+    return csv.dump("fig8: global reduction ratios "
+                    "(road≈1.0, delaunay-like≈0, social in between)")
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,84 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by ``python -m repro.launch.dryrun
+--all --out experiments/dryrun``) and emits, per (arch × shape × mesh):
+three roofline terms in seconds, the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs utilisation, and a one-line lever on the dominant term.
+
+Terms (TPU v5e): compute = flops/dev ÷ 197e12; memory = bytes/dev ÷ 819e9;
+collective = link_bytes/dev ÷ 50e9. flops/bytes come from
+``compiled.cost_analysis()`` of the partitioned per-device module;
+link_bytes from parsing collective ops out of the optimized HLO.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+LEVERS = {
+    "compute": "more chips / lower-precision matmuls / fewer recompute "
+               "(remat policy) — compute-bound is the roofline target",
+    "memory": "fuse elementwise chains, cast activations to bf16, raise "
+              "arithmetic intensity (bigger per-chip tiles)",
+    "collective": "shard to cut gather volume (FSDP prefetch overlap), "
+                  "int8-compress cross-pod grads, overlap collectives "
+                  "with compute (async collectives)",
+}
+
+
+def load_records(dirpath: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r: Dict) -> str:
+    if r["kind"] == "skip":
+        return (f"{r['arch']:22s} {r['cell']:15s} {r['mesh']:8s} "
+                f"SKIPPED ({r['note'][:60]})")
+    if not r["ok"]:
+        return (f"{r['arch']:22s} {r['cell']:15s} {r['mesh']:8s} FAILED")
+    util = (r["model_flops"] / (r["flops_per_device"] * r["n_devices"])
+            if r["flops_per_device"] else 0.0)
+    dom = r["bottleneck"]
+    t_dom = r[f"t_{dom}"]
+    frac = t_dom / max(r["t_compute"] + 1e-30, 1e-30)
+    return (f"{r['arch']:22s} {r['cell']:15s} {r['mesh']:8s} "
+            f"tc={r['t_compute']:.3e} tm={r['t_memory']:.3e} "
+            f"tx={r['t_collective']:.3e} dom={dom:10s} "
+            f"useful/HLO={util:.2f} peak={r['peak_memory_per_device']/2**30:.1f}GiB")
+
+
+def main(fast: bool = False) -> str:
+    recs = load_records()
+    if not recs:
+        return ("# roofline: no dry-run records found — run\n"
+                "#   python -m repro.launch.dryrun --all --multi-pod both "
+                "--out experiments/dryrun\n")
+    out = ["# roofline terms per (arch × shape × mesh), seconds per step",
+           "# tc=compute tm=memory tx=collective; useful/HLO = "
+           "MODEL_FLOPS/(HLO flops × devices)"]
+    ok = [r for r in recs if r["ok"] and r["kind"] != "skip"]
+    skip = [r for r in recs if r["kind"] == "skip"]
+    fail = [r for r in recs if not r["ok"]]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        out.append(fmt_row(r))
+    for r in sorted(skip, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        out.append(fmt_row(r))
+    out.append(f"# {len(ok)} compiled, {len(skip)} skipped, "
+               f"{len(fail)} failed")
+    # bottleneck census + levers
+    census: Dict[str, int] = {}
+    for r in ok:
+        census[r["bottleneck"]] = census.get(r["bottleneck"], 0) + 1
+    for k, v in sorted(census.items()):
+        out.append(f"# bottleneck {k}: {v} cells — lever: {LEVERS[k]}")
+    return "\n".join(out) + "\n"
+
+
+if __name__ == "__main__":
+    print(main())

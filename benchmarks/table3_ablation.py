@@ -1,0 +1,39 @@
+"""Paper Table 3: ablation — disable one reduction at a time.
+
+Variant1 = no global reduction, Variant2 = no dynamic reduction,
+Variant3 = no maximality-check reduction. Times from the bitset engine
+(jit-warmed, best of 2).
+"""
+from __future__ import annotations
+
+from benchmarks.common import GRAPH_SUITE, Csv, timed
+from repro.core import bitset_engine
+
+VARIANTS = [
+    ("RMCEdegen", dict(global_red=True, dynamic_red=True, x_red=True)),
+    ("Variant1_noGlobal", dict(global_red=False, dynamic_red=True, x_red=True)),
+    ("Variant2_noDynamic", dict(global_red=True, dynamic_red=False, x_red=True)),
+    ("Variant3_noXred", dict(global_red=True, dynamic_red=True, x_red=False)),
+]
+
+
+def main(fast: bool = False) -> str:
+    csv = Csv(["graph"] + [v[0] + "_s" for v in VARIANTS] + ["cliques"])
+    suite = GRAPH_SUITE[:4] if fast else GRAPH_SUITE
+    for name, make, _ in suite:
+        g = make()
+        times = []
+        counts = set()
+        for _, kw in VARIANTS:
+            bitset_engine.run(g, bucket_sizes=(32, 64, 128, 256), **kw)  # warm
+            t, r = timed(bitset_engine.run, g,
+                         bucket_sizes=(32, 64, 128, 256), repeat=2, **kw)
+            times.append(t)
+            counts.add(r.cliques)
+        assert len(counts) == 1, f"variants disagree on {name}"
+        csv.add(name, *times, counts.pop())
+    return csv.dump("table3: ablation — one reduction disabled at a time")
+
+
+if __name__ == "__main__":
+    print(main())

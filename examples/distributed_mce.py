@@ -1,0 +1,56 @@
+"""Distributed, fault-tolerant MCE: shard_map fan-out + checkpoint/restart.
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python examples/distributed_mce.py
+
+Runs the production driver over 8 (virtual) devices, kills it mid-run,
+then resumes from the chunk checkpoint — the exact flow a preempted pod
+follows. Works on any device count (elastic cursor).
+"""
+import os
+import tempfile
+import time
+
+from repro.core.bitset_engine import EngineConfig
+from repro.core.driver import DistributedMCE
+from repro.graph import kronecker
+
+
+def main():
+    import jax
+    g = kronecker(12, 8, seed=0)
+    print(f"graph: n={g.n} m={g.m}; devices={len(jax.devices())}")
+
+    ckpt = os.path.join(tempfile.mkdtemp(), "mce_ckpt.json")
+    drv = DistributedMCE(g, chunk=64, ckpt_path=ckpt,
+                         cfg=EngineConfig(backend="pivot"))
+    print(f"shards={drv.n_shards} buckets="
+          f"{[(b.u_pad, b.num_roots) for b in drv.prep.buckets]}")
+
+    # simulate a preemption after 2 chunks
+    n = 0
+    orig = drv._run_chunk
+
+    def preempted(*args):
+        nonlocal n
+        if n >= 2:
+            raise RuntimeError("node lost")
+        n += 1
+        return orig(*args)
+
+    drv._run_chunk = preempted
+    try:
+        drv.run()
+    except RuntimeError as e:
+        print(f"!! {e} — restarting from checkpoint {ckpt}")
+
+    drv2 = DistributedMCE(g, chunk=64, ckpt_path=ckpt,
+                          cfg=EngineConfig(backend="pivot"))
+    t0 = time.perf_counter()
+    res = drv2.run(resume=True)
+    print(f"resumed + finished in {time.perf_counter()-t0:.1f}s: "
+          f"{res.cliques} maximal cliques ({res.calls} calls)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""RMCE as a data-pipeline stage: clique features for GNN training.
+
+    PYTHONPATH=src python examples/graph_pipeline.py
+
+The paper's reductions are graph-combinatorial preprocessing. This example
+shows the substrate-level integration (DESIGN.md §Arch-applicability): the
+reduction + MCE engine computes per-vertex clique statistics which become
+input features for a GNN node-classification run — a production pattern
+(clique counts are strong community features), and the reduced graph feeds
+the sampler directly.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset_engine
+from repro.core.global_reduction import global_reduce_host
+from repro.graph import caveman
+from repro.models.gnn_steps import batch_from_graph, make_gnn_train_step
+from repro.configs import get_arch
+from repro.models.gnn_steps import FORWARD
+from repro.optim import adamw_init
+
+
+def clique_features(g, out_cap: int = 65536) -> np.ndarray:
+    """(N, 3) features: [#maximal cliques at v, max clique size at v,
+    deleted-by-reduction flag]."""
+    res = bitset_engine.run(g, enumerate_cliques=True, out_cap=out_cap)
+    assert not res.overflow, "raise out_cap for this graph"
+    count = np.zeros(g.n)
+    maxsz = np.zeros(g.n)
+    for c in res.enumerated:
+        for v in c:
+            count[v] += 1
+            maxsz[v] = max(maxsz[v], len(c))
+    red = global_reduce_host(g)
+    deleted = (red.graph.degrees() == 0).astype(np.float64)
+    return np.stack([count, maxsz, deleted], axis=1).astype(np.float32)
+
+
+def main():
+    g = caveman(24, 7, rewire=0.15, seed=0)
+    print(f"graph: n={g.n} m={g.m}")
+    feats = clique_features(g)
+    print(f"clique features: mean #cliques/vertex {feats[:,0].mean():.2f}, "
+          f"max clique size {int(feats[:,1].max())}")
+
+    # node task: predict each vertex's community density (max clique size)
+    batch = batch_from_graph(g, d_feat=8, seed=1)
+    batch["node_feat"] = np.concatenate(
+        [batch["node_feat"][:, :5], feats], axis=1)   # inject clique features
+    batch["targets"] = feats[:, 1] / max(feats[:, 1].max(), 1)
+
+    cfg = get_arch("meshgraphnet").build_smoke()
+    _, init, _, _ = FORWARD["meshgraphnet"]
+    params = init(cfg, jax.random.PRNGKey(0), 8)
+    opt = adamw_init(params)
+    step = jax.jit(make_gnn_train_step("meshgraphnet", cfg, 1, lr=3e-3))
+    b = {k: jnp.asarray(v) for k, v in batch.items()}
+    for i in range(40):
+        params, opt, loss = step(params, opt, b)
+        if i % 10 == 0 or i == 39:
+            print(f"step {i:3d} loss {float(loss):.4f}")
+    print("clique-feature GNN pipeline: OK")
+
+
+if __name__ == "__main__":
+    main()

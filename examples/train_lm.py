@@ -1,0 +1,85 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+This is the (b) "end-to-end driver" deliverable: a real model (qwen3-family
+block structure at ~100M scale), the real data pipeline (deterministic token
+stream + background prefetch), AdamW + cosine schedule, async keep-k
+checkpointing, and restart-on-failure — the same loop the production mesh
+runs, on the host device.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import Prefetcher, TokenStream
+from repro.models import transformer as T
+from repro.models.lm_steps import make_train_step
+from repro.optim import AdamWConfig, adamw_init, cosine_warmup
+
+
+def config_100m() -> T.TransformerConfig:
+    """~100M params: 12L, d=768, 12H (GQA kv=4), ffn 2048, vocab 32k."""
+    return T.TransformerConfig(
+        name="qwen3-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_head=64, d_ff=2048, vocab=32000, qk_norm=True, remat="none",
+        dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/lm100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    mgr = CheckpointManager(args.ckpt, keep=2)
+
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    from repro.optim import adamw_update
+
+    @jax.jit
+    def train_step(params, opt, tokens, targets, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.lm_loss(cfg, p, tokens, targets))(params)
+        params, opt = adamw_update(params, grads, opt, lr,
+                                   AdamWConfig(weight_decay=0.1))
+        return params, opt, loss
+
+    start = mgr.latest_step() or 0
+    if start:
+        (params, opt), start, _ = mgr.restore((params, opt))
+        print(f"resumed at step {start}")
+
+    pf = Prefetcher(lambda s: stream.batch(s), depth=2, start_step=start,
+                    num_steps=args.steps - start)
+    t0 = time.time()
+    tokens_seen = 0
+    for step, (toks, tgts) in pf:
+        lr = cosine_warmup(step, peak_lr=3e-4, warmup=20, total=args.steps)
+        params, opt, loss = train_step(params, opt, jnp.asarray(toks),
+                                       jnp.asarray(tgts), lr)
+        tokens_seen += toks.size
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"lr {float(lr):.2e}  {tokens_seen/max(dt,1e-9):.0f} tok/s",
+                  flush=True)
+        if (step + 1) % 100 == 0:
+            mgr.save_async(step + 1, (params, opt))
+    mgr.wait()
+    mgr.save(args.steps, (params, opt))
+    print(f"done in {time.time()-t0:.0f}s; checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

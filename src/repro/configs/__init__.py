@@ -1,0 +1,22 @@
+"""Architecture registry: every assigned arch is selectable via --arch <id>.
+
+Importing this package registers all architectures. `get_arch(name)` returns
+the ArchSpec; `list_archs()` enumerates them.
+"""
+from repro.configs.base import ArchSpec, ShapeCell, get_arch, list_archs, register
+
+# assigned architectures (importing registers them)
+from repro.configs import mixtral_8x7b         # noqa: F401
+from repro.configs import phi35_moe            # noqa: F401
+from repro.configs import qwen3_14b            # noqa: F401
+from repro.configs import chatglm3_6b          # noqa: F401
+from repro.configs import command_r_plus_104b  # noqa: F401
+from repro.configs import meshgraphnet         # noqa: F401
+from repro.configs import schnet               # noqa: F401
+from repro.configs import dimenet              # noqa: F401
+from repro.configs import mace                 # noqa: F401
+from repro.configs import two_tower_retrieval  # noqa: F401
+# the paper's own architecture: distributed RMCE
+from repro.configs import rmce                 # noqa: F401
+
+__all__ = ["ArchSpec", "ShapeCell", "get_arch", "list_archs", "register"]

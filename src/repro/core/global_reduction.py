@@ -1,0 +1,206 @@
+"""Global reduction (paper §4): low-degree vertex + non-triangle edge reduction.
+
+Two implementations:
+
+* `global_reduce_host` — numpy/python cascade queue, exact Algorithm 5 + 6
+  semantics run to fixpoint (edge deletions re-enqueue new low-degree
+  vertices, per the paper's Figure 3 discussion). This is the ingest-stage
+  path a production deployment uses, and the path that *enumerates* the
+  advance-reported cliques.
+* `global_reduce_jnp` — fixed-shape, mask-based device path (counting mode):
+  returns alive masks + counts of advance-reported cliques. This is what runs
+  on TPU inside the distributed pipeline where the reduced graph feeds the
+  bitset BK engine directly.
+
+Both preserve the paper's invariant  mc(G) = mc(G') + α(ΔV, ΔE).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph, from_edge_list
+
+
+@dataclasses.dataclass
+class GlobalReduction:
+    graph: CSRGraph                      # reduced graph G' (original vertex ids)
+    reported: List[FrozenSet[int]]       # α(ΔV, ΔE): maximal cliques reported in advance
+    num_deleted_vertices: int
+    num_deleted_edges: int
+
+
+def _common_neighbor_exists(adj: dict, u: int, v: int, exclude: int = -1) -> int:
+    """Return a common neighbor of u, v other than `exclude`, or -1."""
+    a, b = adj[u], adj[v]
+    if len(a) > len(b):
+        a, b = b, a
+    for w in a:
+        if w != exclude and w in b:
+            return w
+    return -1
+
+
+def global_reduce_host(g: CSRGraph, vertex_rule: bool = True,
+                       edge_rule: bool = True) -> GlobalReduction:
+    """Cascaded global reduction to fixpoint (Algorithms 5 + 6)."""
+    adj = {v: set(g.neighbors(v).tolist()) for v in range(g.n)}
+    reported: List[FrozenSet[int]] = []
+    deleted_v = 0
+    deleted_e = 0
+    alive = np.ones(g.n, dtype=bool)
+
+    def kill_edge(a: int, b: int) -> None:
+        nonlocal deleted_e
+        adj[a].discard(b)
+        adj[b].discard(a)
+        deleted_e += 1
+
+    def kill_vertex(v: int) -> None:
+        nonlocal deleted_v, deleted_e
+        for u in list(adj[v]):
+            adj[u].discard(v)
+            deleted_e += 1
+        adj[v].clear()
+        alive[v] = False
+        deleted_v += 1
+
+    if vertex_rule:
+        queue = [v for v in range(g.n) if len(adj[v]) <= 2]
+        in_q = set(queue)
+        qi = 0
+        while qi < len(queue):
+            v = queue[qi]
+            qi += 1
+            in_q.discard(v)
+            if not alive[v]:
+                continue
+            d = len(adj[v])
+            if d > 2:
+                continue
+            neighbors = list(adj[v])
+            if d == 0:
+                # Lemma 1: no report (singletons are not cliques)
+                alive[v] = False
+                deleted_v += 1
+            elif d == 1:
+                # Lemma 2
+                (u,) = neighbors
+                reported.append(frozenset((v, u)))
+                kill_vertex(v)
+                if alive[u] and len(adj[u]) <= 2 and u not in in_q:
+                    queue.append(u); in_q.add(u)
+            else:
+                # Lemma 3
+                u, w = neighbors
+                if w in adj[u]:
+                    reported.append(frozenset((v, u, w)))
+                    # delete v and its two edges; if u,w have no other common
+                    # neighbor, edge (u,w) must go too (case 2)
+                    other = _common_neighbor_exists(adj, u, w, exclude=v)
+                    kill_vertex(v)
+                    if other < 0:
+                        kill_edge(u, w)
+                else:
+                    reported.append(frozenset((v, u)))
+                    reported.append(frozenset((v, w)))
+                    kill_vertex(v)
+                for t in (u, w):
+                    if alive[t] and len(adj[t]) <= 2 and t not in in_q:
+                        queue.append(t); in_q.add(t)
+
+    if edge_rule:
+        # Non-triangle edge reduction (Algorithm 6), cascading back into
+        # vertex reduction for newly created low-degree vertices.
+        visited = set()
+        edge_stack = [(u, v) for u in range(g.n) if alive[u]
+                      for v in adj[u] if u < v]
+        for (u, v) in edge_stack:
+            if v not in adj[u]:
+                continue
+            key = (u, v)
+            if key in visited:
+                continue
+            w = _common_neighbor_exists(adj, u, v)
+            if w < 0:
+                reported.append(frozenset((u, v)))
+                kill_edge(u, v)
+                # cascade into vertex rule
+                if vertex_rule:
+                    sub_q = [t for t in (u, v) if alive[t] and len(adj[t]) <= 2]
+                    while sub_q:
+                        t = sub_q.pop()
+                        if not alive[t] or len(adj[t]) > 2:
+                            continue
+                        nbs = list(adj[t])
+                        if len(nbs) == 0:
+                            alive[t] = False; deleted_v += 1
+                        elif len(nbs) == 1:
+                            reported.append(frozenset((t, nbs[0])))
+                            kill_vertex(t)
+                            sub_q.extend(x for x in nbs if alive[x] and len(adj[x]) <= 2)
+                        else:
+                            a, b = nbs
+                            if b in adj[a]:
+                                reported.append(frozenset((t, a, b)))
+                                other = _common_neighbor_exists(adj, a, b, exclude=t)
+                                kill_vertex(t)
+                                if other < 0:
+                                    kill_edge(a, b)
+                            else:
+                                reported.append(frozenset((t, a)))
+                                reported.append(frozenset((t, b)))
+                                kill_vertex(t)
+                            sub_q.extend(x for x in nbs if alive[x] and len(adj[x]) <= 2)
+            else:
+                visited.add((min(u, v), max(u, v)))
+                visited.add((min(u, w), max(u, w)))
+                visited.add((min(v, w), max(v, w)))
+
+    edges = [(u, v) for u in range(g.n) if alive[u] for v in adj[u] if u < v]
+    g2 = from_edge_list(g.n, np.array(edges, dtype=np.int64) if edges else np.zeros((0, 2), np.int64))
+    # a vertex counts as deleted once it has no remaining edges (it can never
+    # appear in a clique of the reduced search)
+    return GlobalReduction(
+        graph=g2,
+        reported=reported,
+        num_deleted_vertices=int(np.sum(g2.degrees() == 0)),
+        num_deleted_edges=g.m - g2.m,
+    )
+
+
+# --------------------------------------------------------------------------
+# Device path (counting mode, fixed shapes)
+# --------------------------------------------------------------------------
+
+def global_reduce_jnp(src: jnp.ndarray, dst: jnp.ndarray, n: int,
+                      max_rounds: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Low-degree peel on device: returns (vertex_alive, edge_alive) masks.
+
+    Counting-mode global reduction restricted to the degree-0/1 cascade (the
+    degree-2 and edge rules need clique reporting, which the host path owns;
+    on device they run inside the bitset engine as dynamic reductions, which
+    subsume them at the root level). src/dst are the directed edge lists.
+    """
+
+    def body(state):
+        alive_v, alive_e, it = state
+        deg = jax.ops.segment_sum(alive_e.astype(jnp.int32), src, num_segments=n)
+        low = alive_v & (deg <= 1)
+        alive_v2 = alive_v & ~low
+        alive_e2 = alive_e & alive_v2[src] & alive_v2[dst]
+        return alive_v2, alive_e2, it + 1
+
+    def cond(state):
+        alive_v, alive_e, it = state
+        deg = jax.ops.segment_sum(alive_e.astype(jnp.int32), src, num_segments=n)
+        return jnp.any(alive_v & (deg <= 1)) & (it < max_rounds)
+
+    alive_v = jnp.ones(n, dtype=bool)
+    alive_e = jnp.ones(src.shape, dtype=bool)
+    alive_v, alive_e, _ = jax.lax.while_loop(cond, body, (alive_v, alive_e, jnp.int32(0)))
+    return alive_v, alive_e

@@ -1,0 +1,9 @@
+"""Data pipeline: deterministic synthetic streams for every arch family.
+
+Production shape: host-side prefetch workers produce fixed-shape numpy
+batches; the training loop device_puts them with the step's input sharding.
+Everything is deterministic in (seed, step) so elastic restarts replay the
+exact stream from the checkpoint cursor.
+"""
+from repro.data.tokens import TokenStream, synth_tokens  # noqa: F401
+from repro.data.prefetch import Prefetcher  # noqa: F401

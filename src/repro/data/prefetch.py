@@ -1,0 +1,52 @@
+"""Background-thread prefetcher: overlap host batch synthesis / sampling with
+device compute (the CPU-side analogue of tf.data prefetch)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+class Prefetcher:
+    """Pulls `make_batch(step)` on a worker thread, `depth` batches ahead."""
+
+    def __init__(self, make_batch: Callable[[int], object], depth: int = 2,
+                 start_step: int = 0, num_steps: Optional[int] = None):
+        self._make = make_batch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._start = start_step
+        self._num = num_steps
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        step = self._start
+        while not self._stop.is_set():
+            if self._num is not None and step >= self._start + self._num:
+                self._q.put(None)
+                return
+            try:
+                item = (step, self._make(step))
+            except Exception as e:  # surface worker errors at the consumer
+                self._q.put(e)
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            if isinstance(item, Exception):
+                raise item
+            yield item
+
+    def close(self) -> None:
+        self._stop.set()

@@ -1,0 +1,38 @@
+"""Graph substrate: CSR structures, generators, orderings, sampling.
+
+Everything here is framework-level plumbing shared by the paper core
+(`repro.core`) and the GNN/recsys model stacks. Host-side preprocessing is
+numpy (this mirrors production graph systems, where graph loading/reordering
+is a CPU ingest stage); device-side compute is jnp.
+"""
+from repro.graph.csr import CSRGraph, from_edge_list, induced_subgraph
+from repro.graph.generators import (
+    erdos_renyi,
+    barabasi_albert,
+    random_geometric,
+    grid_road,
+    moon_moser,
+    complete_graph,
+    caveman,
+    kronecker,
+)
+from repro.graph.order import degeneracy_order, core_numbers, kcore_peel_jax
+from repro.graph.sampler import NeighborSampler
+
+__all__ = [
+    "CSRGraph",
+    "from_edge_list",
+    "induced_subgraph",
+    "erdos_renyi",
+    "barabasi_albert",
+    "random_geometric",
+    "grid_road",
+    "moon_moser",
+    "complete_graph",
+    "caveman",
+    "kronecker",
+    "degeneracy_order",
+    "core_numbers",
+    "kcore_peel_jax",
+    "NeighborSampler",
+]

@@ -1,0 +1,20 @@
+# Pallas TPU kernels for the framework's compute hot spots.
+#
+# Each kernel is a subpackage with:
+#   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target),
+#   ref.py    — pure-jnp oracle (the semantics contract),
+#   ops.py    — jit-friendly wrapper dispatching pallas / interpret / jnp.
+#
+# Kernels:
+#   bitset_ops      — fused AND+popcount over bitset rows (the paper's
+#                     set-intersection hot spot: 73.6% of MCE runtime per
+#                     [Han et al. SIGMOD'18]; drives pivot selection and
+#                     degree computation in the bitset BK engine).
+#   common_neighbor — tiled common-neighbour existence over padded adjacency
+#                     (global non-triangle edge reduction, paper §4.3).
+#   segment_spmm    — gather-reduce sparse message passing (GNN substrate).
+#   embedding_bag   — fused multi-hot gather + segment-sum (recsys substrate).
+from repro.kernels.bitset_ops import ops as bitset_ops  # noqa: F401
+from repro.kernels.common_neighbor import ops as common_neighbor  # noqa: F401
+from repro.kernels.segment_spmm import ops as segment_spmm  # noqa: F401
+from repro.kernels.embedding_bag import ops as embedding_bag  # noqa: F401

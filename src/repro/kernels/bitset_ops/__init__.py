@@ -1,0 +1,1 @@
+from repro.kernels.bitset_ops import kernel, ops, ref  # noqa: F401

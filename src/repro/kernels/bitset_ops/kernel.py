@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused AND + popcount over bitset rows.
+
+Computes out[k] = popcount(rows[k] & mask) for a (K, W) uint32 row matrix and
+a (W,) mask, tiled so each grid step keeps a (BK, W) row tile + the mask in
+VMEM. On TPU the AND+popcount pipeline runs on the VPU (8×128 lanes); W is
+padded to the 128-lane boundary by the caller so loads are aligned.
+
+This is the engine's inner-loop op (`deg_P(u)` for all u, pivot scoring,
+X-subset tests). The kernel exists because the op is executed once per BK
+tree node over the whole row matrix — the paper's measurement that set
+intersections are 73.6% of MCE time maps exactly onto this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_K = 256
+
+
+def _and_popcount_kernel(rows_ref, mask_ref, out_ref):
+    rows = rows_ref[...]                      # (BK, W) uint32
+    mask = mask_ref[...]                      # (1, W) uint32
+    anded = jnp.bitwise_and(rows, mask)
+    out_ref[...] = jnp.sum(
+        jax.lax.population_count(anded).astype(jnp.int32), axis=1, keepdims=True
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray,
+                      block_k: int = DEFAULT_BLOCK_K,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Pallas path. rows: (K, W) uint32, mask: (W,) uint32 -> (K,) int32."""
+    k, w = rows.shape
+    bk = min(block_k, k)
+    # pad K to a multiple of the block
+    k_pad = -(-k // bk) * bk
+    if k_pad != k:
+        rows = jnp.pad(rows, ((0, k_pad - k), (0, 0)))
+    grid = (k_pad // bk,)
+    out = pl.pallas_call(
+        _and_popcount_kernel,
+        out_shape=jax.ShapeDtypeStruct((k_pad, 1), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, w), lambda i: (i, 0)),      # row tile in VMEM
+            pl.BlockSpec((1, w), lambda i: (0, 0)),       # mask replicated
+        ],
+        out_specs=pl.BlockSpec((bk, 1), lambda i: (i, 0)),
+        interpret=interpret,
+    )(rows, mask[None, :])
+    return out[:k, 0]

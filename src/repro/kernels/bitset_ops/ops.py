@@ -1,0 +1,27 @@
+"""Dispatching wrapper for bitset ops.
+
+On TPU the Pallas kernel is used; on CPU (this container) the pure-jnp ref is
+both the oracle and the execution path (the Pallas kernel is validated in
+interpret mode by tests). The engine's semantics never depend on the path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset_ops import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """popcount(rows & mask) per row; dispatches pallas on TPU, jnp elsewhere.
+
+    Supports leading batch dims via the ref path; the pallas path handles the
+    2-D case that the engine's hot loop emits.
+    """
+    if _on_tpu() and rows.ndim == 2:
+        return kernel.and_popcount_rows(rows, mask, interpret=False)
+    return ref.and_popcount_rows(rows, mask)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the bitset AND+popcount kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """popcount(rows & mask) reduced over the word axis.
+
+    rows: (..., K, W) uint32, mask: (..., W) uint32 -> (..., K) int32.
+    This is `|N(u) ∩ P|` for every u at once — the MCE set-intersection
+    hot spot in bitset form.
+    """
+    anded = jnp.bitwise_and(rows, mask[..., None, :])
+    return jnp.sum(jax.lax.population_count(anded), axis=-1).astype(jnp.int32)
+
+
+def and_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """rows & mask broadcast over the row axis (materialised intersection)."""
+    return jnp.bitwise_and(rows, mask[..., None, :])

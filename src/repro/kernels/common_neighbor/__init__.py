@@ -1,0 +1,1 @@
+from repro.kernels.common_neighbor import kernel, ops, ref  # noqa: F401

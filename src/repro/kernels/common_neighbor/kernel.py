@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: tiled common-neighbour existence.
+
+Each grid step loads a (BE, D) tile of both endpoint adjacency rows into VMEM
+and evaluates the all-pairs equality reduce on the VPU. The D×D comparison is
+dense and regular — the TPU-native replacement for the CPU paper's
+merge-based sorted-list intersection (whose data-dependent control flow does
+not map to the VPU). See DESIGN.md §2 (hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_E = 128
+
+
+def _cn_kernel(adj_u_ref, adj_v_ref, out_ref):
+    au = adj_u_ref[...]                    # (BE, D)
+    av = adj_v_ref[...]                    # (BE, D)
+    eq = (au[:, :, None] == av[:, None, :])
+    valid = (au[:, :, None] >= 0) & (av[:, None, :] >= 0)
+    hit = jnp.any(eq & valid, axis=(1, 2))
+    out_ref[...] = hit[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def has_common_neighbor(adj_u: jnp.ndarray, adj_v: jnp.ndarray,
+                        block_e: int = DEFAULT_BLOCK_E,
+                        interpret: bool = True) -> jnp.ndarray:
+    e, d = adj_u.shape
+    be = min(block_e, e)
+    e_pad = -(-e // be) * be
+    if e_pad != e:
+        pad = ((0, e_pad - e), (0, 0))
+        adj_u = jnp.pad(adj_u, pad, constant_values=-1)
+        adj_v = jnp.pad(adj_v, pad, constant_values=-1)
+    out = pl.pallas_call(
+        _cn_kernel,
+        out_shape=jax.ShapeDtypeStruct((e_pad, 1), jnp.int32),
+        grid=(e_pad // be,),
+        in_specs=[
+            pl.BlockSpec((be, d), lambda i: (i, 0)),
+            pl.BlockSpec((be, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((be, 1), lambda i: (i, 0)),
+        interpret=interpret,
+    )(adj_u, adj_v)
+    return out[:e, 0] != 0

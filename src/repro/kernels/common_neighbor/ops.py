@@ -1,0 +1,39 @@
+"""Wrapper: edge-parallel non-triangle test over a padded-CSR graph."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common_neighbor import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def has_common_neighbor(adj_u: jnp.ndarray, adj_v: jnp.ndarray) -> jnp.ndarray:
+    if _on_tpu():
+        return kernel.has_common_neighbor(adj_u, adj_v, interpret=False)
+    return ref.has_common_neighbor(adj_u, adj_v)
+
+
+def edge_common_neighbor(padded_adj: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """padded_adj: (N, D) int32 sorted neighbours padded with -1;
+    edges: (E, 2) int32. Returns (E,) bool — does the edge close a triangle.
+
+    The gathers run in XLA (HBM-friendly); the dense D×D compare tile is the
+    kernel. Self-matches are impossible (simple graph: u ∉ N(u))."""
+    adj_u = padded_adj[edges[:, 0]]
+    adj_v = padded_adj[edges[:, 1]]
+    return has_common_neighbor(adj_u, adj_v)
+
+
+def pad_adjacency(indptr: np.ndarray, indices: np.ndarray, max_deg: int) -> np.ndarray:
+    """Host helper: CSR -> (N, max_deg) int32 padded with -1."""
+    n = len(indptr) - 1
+    out = -np.ones((n, max_deg), dtype=np.int32)
+    for v in range(n):
+        row = indices[indptr[v]:indptr[v + 1]]
+        out[v, :len(row)] = row
+    return out

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: common-neighbour existence per edge.
+
+Given pre-gathered padded adjacency rows for both endpoints of each edge
+(`adj_u`, `adj_v`: (E, D) int32, padded with -1), decide whether the two
+endpoints share any real common neighbour. This is the inner test of the
+paper's non-triangle edge reduction (§4.3, Lemma 4): edges with no common
+neighbour are maximal 2-cliques and are deleted.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def has_common_neighbor(adj_u: jnp.ndarray, adj_v: jnp.ndarray) -> jnp.ndarray:
+    """(E, D) x (E, D) -> (E,) bool. Padding entries must be -1."""
+    eq = adj_u[:, :, None] == adj_v[:, None, :]
+    valid = (adj_u[:, :, None] >= 0) & (adj_v[:, None, :] >= 0)
+    return jnp.any(eq & valid, axis=(1, 2))

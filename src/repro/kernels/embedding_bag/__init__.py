@@ -1,0 +1,1 @@
+from repro.kernels.embedding_bag import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: EmbeddingBag as tiled one-hot GEMM (MXU path).
+
+Hardware adaptation: TPUs have no fast data-dependent gather from HBM inside
+a kernel; for small/medium vocab shards (the per-device shard of a
+row-sharded table after the mod-sharding in repro/models/recsys.py), the
+lookup is re-expressed as  onehot(ids) @ table — a (B_blk, V_blk)·(V_blk, D)
+GEMM chain accumulated over vocab tiles on the MXU. Bags reduce over L inside
+the tile. Giant tables use the XLA take-based path (ops.py dispatch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_V = 512
+
+
+def _bag_kernel(ids_ref, table_ref, out_ref, *, block_v):
+    v_tile = pl.program_id(1)
+    ids = ids_ref[...]                              # (BB, L)
+    tbl = table_ref[...]                            # (BV, D)
+    base = v_tile * block_v
+    local = ids - base                              # (BB, L)
+    valid = (ids >= 0) & (local >= 0) & (local < block_v)
+    onehot = (
+        (local[:, :, None] == jnp.arange(block_v)[None, None, :]) & valid[:, :, None]
+    ).astype(jnp.float32)                           # (BB, L, BV)
+    counts = onehot.sum(axis=1)                     # (BB, BV) multi-hot counts
+    part = jax.lax.dot_general(
+        counts, tbl, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (BB, D)
+
+    @pl.when(v_tile == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def embedding_bag_sum(table: jnp.ndarray, ids: jnp.ndarray,
+                      block_b: int = DEFAULT_BLOCK_B,
+                      block_v: int = DEFAULT_BLOCK_V,
+                      interpret: bool = True) -> jnp.ndarray:
+    v, d = table.shape
+    b, l = ids.shape
+    bb = min(block_b, b)
+    bv = min(block_v, v)
+    b_pad = -(-b // bb) * bb
+    v_pad = -(-v // bv) * bv
+    if b_pad != b:
+        ids = jnp.pad(ids, ((0, b_pad - b), (0, 0)), constant_values=-1)
+    if v_pad != v:
+        table = jnp.pad(table, ((0, v_pad - v), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, block_v=bv),
+        out_shape=jax.ShapeDtypeStruct((b_pad, d), jnp.float32),
+        grid=(b_pad // bb, v_pad // bv),
+        in_specs=[
+            pl.BlockSpec((bb, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table.astype(jnp.float32))
+    return out[:b]

@@ -1,0 +1,20 @@
+"""Dispatch: one-hot GEMM kernel for small vocab shards, XLA take otherwise."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import kernel, ref
+
+ONEHOT_VOCAB_LIMIT = 65536  # beyond this the one-hot GEMM wastes MXU flops
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  combiner: str = "sum") -> jnp.ndarray:
+    if _on_tpu() and combiner == "sum" and table.shape[0] <= ONEHOT_VOCAB_LIMIT:
+        return kernel.embedding_bag_sum(table, ids, interpret=False)
+    return ref.embedding_bag(table, ids, combiner)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: EmbeddingBag (multi-hot gather + reduce).
+
+JAX has no native nn.EmbeddingBag; this take+mask+sum formulation IS the
+recsys substrate (see system prompt: building it is part of the system).
+ids are padded with -1 (masked out). combiner: 'sum' | 'mean'.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  combiner: str = "sum") -> jnp.ndarray:
+    """table: (V, D); ids: (B, L) int32 padded with -1 -> (B, D)."""
+    mask = ids >= 0
+    safe = jnp.where(mask, ids, 0)
+    rows = table[safe] * mask[..., None]
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1)
+        out = out / denom
+    return out

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Hardware adaptation (DESIGN.md §2): the XLA lowering of blockwise attention
+round-trips the (B, H, Sq, KV) probability tensors through HBM at every
+fusion boundary — ~20% of the HBM bytes of an LM train step (measured in
+EXPERIMENTS.md §Perf/qwen3). This kernel keeps scores/probabilities in VMEM:
+each grid step owns a (BQ, D) query tile and streams KV in (BK, D) tiles,
+carrying the online-softmax (m, l, acc) in VMEM scratch. HBM traffic is
+exactly q + k + v + out.
+
+Tiling: BQ rows × D lanes with D padded to 128 (MXU alignment); BK chosen so
+(BQ·BK scores + 2·BK·D kv tile) fits VMEM alongside the accumulator.
+Grid = (batch·heads, Sq/BQ) — queries parallel, KV streamed innermost via
+the contraction dim of the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, block_q, block_k, seq_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+
+    run = True
+    if causal:
+        # whole tile above the diagonal: nothing to do
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0].astype(jnp.float32)            # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < seq_k
+        if causal:
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                      # stays in VMEM
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) — heads pre-flattened/expanded.
+    Returns (BH, Sq, D) in q.dtype. Causal assumes Sq == Sk alignment."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sq_pad = -(-sq // bq) * bq
+    sk_pad = -(-sk // bk) * bk
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0)))
+    grid = (bh, sq_pad // bq, sk_pad // bk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=bq, block_k=bk, seq_k=sk),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_pad, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),       # acc
+            pltpu.VMEM((bq, 1), jnp.float32),       # running max
+            pltpu.VMEM((bq, 1), jnp.float32),       # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

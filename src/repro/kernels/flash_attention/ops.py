@@ -1,0 +1,34 @@
+"""Dispatch wrapper: Pallas flash attention on TPU, jnp blockwise elsewhere.
+
+`mha` adapts the (B, S, H, D) layout of repro.models.layers to the kernel's
+flattened (B·H, S, D) layout; GQA expansion happens before the call (the
+kernel is head-agnostic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    if _on_tpu():
+        return kernel.flash_attention(q, k, v, causal=causal,
+                                      interpret=False)
+    return ref.flash_attention(q, k, v, causal=causal)
+
+
+def mha(q, k, v, *, causal: bool = True):
+    """(B, S, H, D) attention via the flash kernel."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    qf = jnp.swapaxes(q, 1, 2).reshape(b * h, sq, d)
+    kf = jnp.swapaxes(k, 1, 2).reshape(b * h, sk, d)
+    vf = jnp.swapaxes(v, 1, 2).reshape(b * h, sk, d)
+    out = flash_attention(qf, kf, vf, causal=causal)
+    return jnp.swapaxes(out.reshape(b, h, sq, d), 1, 2)

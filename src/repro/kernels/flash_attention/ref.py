@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D). Full-softmax reference."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    out = jnp.einsum("bqk,bkd->bqd", _softmax(s), v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _softmax(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

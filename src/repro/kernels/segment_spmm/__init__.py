@@ -1,0 +1,1 @@
+from repro.kernels.segment_spmm import kernel, ops, ref  # noqa: F401

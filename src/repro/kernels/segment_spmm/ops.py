@@ -1,0 +1,36 @@
+"""Dispatch: segment_sum for sparse graphs, dense MXU kernel for molecules."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_spmm import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_spmm(x, src, dst, n_nodes, edge_weight=None):
+    """Sparse path — always the segment_sum formulation (gather+scatter)."""
+    return ref.segment_spmm(x, src, dst, n_nodes, edge_weight)
+
+
+def dense_spmm(adj, x):
+    """Batched-small-graph path — Pallas MXU kernel on TPU, jnp elsewhere."""
+    if _on_tpu():
+        return kernel.dense_spmm(adj, x, interpret=False)
+    return ref.dense_spmm(adj, x)
+
+
+def densify_edges(src, dst, n_nodes, graph_id, n_graphs, nodes_per_graph,
+                  edge_weight=None):
+    """Build (B, N, N) dense adjacency from a batched edge list.
+
+    src/dst are global node indices (graph g owns [g*N, (g+1)*N)); rows are
+    destinations, columns sources — matches ref.dense_spmm convention."""
+    local_s = src - graph_id * nodes_per_graph
+    local_d = dst - graph_id * nodes_per_graph
+    w = jnp.ones_like(src, dtype=jnp.float32) if edge_weight is None else edge_weight
+    adj = jnp.zeros((n_graphs, nodes_per_graph, nodes_per_graph), jnp.float32)
+    return adj.at[graph_id, local_d, local_s].add(w)

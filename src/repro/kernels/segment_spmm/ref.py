@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for sparse message-passing aggregation (GNN substrate).
+
+Two equivalent formulations:
+  * `segment_spmm` — edge-list gather + segment_sum (the canonical JAX GNN
+    primitive; JAX has no CSR SpMM, so this IS the sparse substrate).
+  * `dense_spmm`   — batched dense adjacency matmul, equal on densifiable
+    graphs; this is the MXU-friendly form the Pallas kernel implements for
+    the batched-small-graph regime (molecule shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm(x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                 n_nodes: int, edge_weight: jnp.ndarray | None = None) -> jnp.ndarray:
+    """out[d] = Σ_{e: dst[e]=d} w[e] · x[src[e]].  x: (N, F)."""
+    msgs = x[src]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+
+
+def dense_spmm(adj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """adj: (B, N, N) weights (adj[b, d, s]); x: (B, N, F) -> (B, N, F)."""
+    return jnp.einsum("bds,bsf->bdf", adj, x)

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, record memory/cost/collective analysis for the roofline.
+
+MUST be run as a module entry (``python -m repro.launch.dryrun``) or imported
+before anything else touches jax — the XLA_FLAGS line above executes before
+any jax import so `jax.make_mesh((2,16,16), ...)` can build 512 host devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~per-axis effective)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\(?[a-z0-9\[\],{}\s/_]*\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1
+    first = m.group(1).split("},{")[0]
+    return max(1, first.count(",") + 1)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, bytes, link_bytes} from post-SPMD optimized HLO.
+
+    link_bytes ≈ per-device bytes crossing ICI, ring-algorithm model:
+      all-reduce       2 (g-1)/g × size
+      all-gather         (g-1)/g × size(output)   [per-shard input × (g-1)]
+      reduce-scatter     (g-1)/g × size(input)
+      all-to-all         (g-1)/g × size
+      collective-permute          size
+    `-start/-done` async pairs are counted once (at -start; bare ops too).
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2).lower()
+        size = _shape_bytes(shape_str)
+        g = _group_size(line)
+        if g <= 1:
+            link = 0.0
+        elif kind == "all-reduce":
+            link = 2.0 * (g - 1) / g * size
+        elif kind == "collective-permute":
+            link = float(size)
+        else:
+            link = (g - 1) / g * size
+        rec = out.setdefault(kind, dict(count=0, bytes=0.0, link_bytes=0.0))
+        rec["count"] += 1
+        rec["bytes"] += size
+        rec["link_bytes"] += link
+    return out
+
+
+@dataclasses.dataclass
+class DryrunRecord:
+    arch: str
+    cell: str
+    kind: str
+    mesh: str
+    n_devices: int
+    ok: bool
+    error: Optional[str] = None
+    compile_s: float = 0.0
+    # per-device terms from the partitioned module
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    peak_memory_per_device: float = 0.0
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    collectives: Dict = dataclasses.field(default_factory=dict)
+    link_bytes_per_device: float = 0.0
+    model_flops: float = 0.0
+    # secondary: raw XLA cost_analysis numbers (while bodies counted once)
+    flops_ca: float = 0.0
+    bytes_ca: float = 0.0
+    # roofline terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    note: str = ""
+
+
+def _measure(prog, mesh, save_hlo: Optional[str] = None) -> Dict[str, float]:
+    """Lower + compile one CellProgram; return per-device terms.
+
+    Primary flops/bytes/link come from the trip-count-weighted HLO walker
+    (repro.launch.hlo_cost) — ``cost_analysis()`` counts while bodies once
+    (verified, see EXPERIMENTS.md §Methodology) and is kept as a secondary
+    record (flops_ca / bytes_ca)."""
+    from repro.launch.hlo_cost import analyze
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(prog.fn, donate_argnums=prog.donate)
+        lowered = jitted.lower(*prog.args)
+        compiled = lowered.compile()
+    out = dict(compile_s=time.time() - t0)
+    cost = compiled.cost_analysis() or {}
+    out["flops_ca"] = float(cost.get("flops", 0.0))
+    out["bytes_ca"] = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        out["peak"] = float(getattr(mem, "peak_memory_in_bytes", 0))
+        out["args"] = float(getattr(mem, "argument_size_in_bytes", 0))
+        out["outs"] = float(getattr(mem, "output_size_in_bytes", 0))
+    except Exception:
+        out["peak"] = out["args"] = out["outs"] = 0.0
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    w = analyze(hlo)
+    out["flops"] = w["flops"]
+    out["bytes"] = w["bytes"]
+    out["link"] = w["link"]
+    out["collectives"] = w["collectives"]
+    return out
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool,
+             save_hlo: Optional[str] = None,
+             cfg_map=None) -> DryrunRecord:
+    """One dry-run cell: lower + compile + trip-count-weighted HLO costing.
+
+    `cfg_map` (LM family): config transform hook used by the §Perf
+    hillclimb to lower optimized variants of the same cell."""
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec = DryrunRecord(arch=arch, cell=cell_name, kind="?", mesh=mesh_name,
+                       n_devices=n_dev, ok=False)
+    try:
+        prog = build_cell(arch, cell_name, mesh, cfg_map=cfg_map)
+        rec.kind = prog.kind
+        rec.model_flops = prog.model_flops
+        rec.note = prog.note
+        m = _measure(prog, mesh, save_hlo)
+        rec.compile_s = m["compile_s"]
+        rec.peak_memory_per_device = m["peak"]
+        rec.argument_bytes = m["args"]
+        rec.output_bytes = m["outs"]
+        rec.collectives = m["collectives"]
+        rec.flops_ca = m["flops_ca"]
+        rec.bytes_ca = m["bytes_ca"]
+        rec.flops_per_device = m["flops"]
+        rec.bytes_per_device = m["bytes"]
+        rec.link_bytes_per_device = m["link"]
+        rec.t_compute = m["flops"] / PEAK_FLOPS_BF16
+        rec.t_memory = m["bytes"] / HBM_BW
+        rec.t_collective = m["link"] / ICI_BW
+        terms = dict(compute=rec.t_compute, memory=rec.t_memory,
+                     collective=rec.t_collective)
+        rec.bottleneck = max(terms, key=terms.get)
+        rec.ok = True
+    except Exception as e:
+        rec.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()}"
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("on", "off", "both"),
+                    default="off")
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.cells import all_cells
+
+    todo = []
+    if args.all:
+        todo = [(a, c, s) for a, c, s in all_cells()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape or --all required")
+        todo = [(args.arch, args.shape, None)]
+
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch, cell, skip in todo:
+        for mp in pods:
+            mesh_name = "2x16x16" if mp else "16x16"
+            tag = f"{arch}/{cell}@{mesh_name}"
+            if skip:
+                print(f"[SKIP] {tag}: {skip}")
+                if args.out:
+                    rec = DryrunRecord(arch=arch, cell=cell, kind="skip",
+                                       mesh=mesh_name, n_devices=0, ok=True,
+                                       note=f"SKIPPED: {skip}")
+                    _dump(args.out, rec)
+                continue
+            rec = run_cell(arch, cell, mp, save_hlo=args.save_hlo)
+            if rec.ok:
+                print(f"[ OK ] {tag}: compile={rec.compile_s:.1f}s "
+                      f"flops/dev={rec.flops_per_device:.3e} "
+                      f"bytes/dev={rec.bytes_per_device:.3e} "
+                      f"link/dev={rec.link_bytes_per_device:.3e} "
+                      f"peakmem/dev={rec.peak_memory_per_device/2**30:.2f}GiB "
+                      f"bottleneck={rec.bottleneck}")
+            else:
+                n_fail += 1
+                first = rec.error.splitlines()[0] if rec.error else "?"
+                print(f"[FAIL] {tag}: {first}")
+            if args.out:
+                _dump(args.out, rec)
+    print(f"dry-run finished: {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+def _dump(out_dir: str, rec: DryrunRecord) -> None:
+    name = f"{rec.arch}__{rec.cell}__{rec.mesh}.json".replace("/", "_")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(dataclasses.asdict(rec), f, indent=1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""Model stacks: LM transformers, GNNs, recsys towers, MCE-as-arch."""

@@ -1,0 +1,73 @@
+"""Real spherical harmonics (l ≤ 2) + numerically derived Gaunt/CG couplings.
+
+Self-contained E(3)-equivariance machinery for the MACE architecture: no
+e3nn dependency in this container, so the real-basis Clebsch–Gordan (Gaunt)
+coefficients are computed once, at import, by numerical quadrature of
+∫ Y_{l1 m1} Y_{l2 m2} Y_{l3 m3} dΩ on a dense spherical grid. For l ≤ 2 a
+128×256 product Gauss–Legendre × uniform grid is exact to ~1e-12.
+
+Conventions: real spherical harmonics with Condon–Shortley-free real basis,
+ordered m = -l..l; irrep slices concatenated [l=0 | l=1 | l=2] (dims 1,3,5).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+L_MAX = 2
+IRREP_DIMS = [2 * l + 1 for l in range(L_MAX + 1)]       # [1, 3, 5]
+IRREP_OFF = np.concatenate([[0], np.cumsum(IRREP_DIMS)])  # [0,1,4,9]
+SH_DIM = int(IRREP_OFF[-1])                               # 9
+
+
+def real_sph_harm_l2(xyz: np.ndarray | jnp.ndarray, np_mod=jnp):
+    """Real spherical harmonics Y_lm(r̂) for l=0..2. xyz: (..., 3) unit
+    vectors → (..., 9). Works for numpy and jnp via np_mod."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    c0 = 0.5 * np.sqrt(1.0 / np.pi)
+    c1 = np.sqrt(3.0 / (4 * np.pi))
+    out = [
+        np_mod.full(x.shape, c0) if hasattr(np_mod, "full") else c0,
+        c1 * y, c1 * z, c1 * x,
+        0.5 * np.sqrt(15 / np.pi) * x * y,
+        0.5 * np.sqrt(15 / np.pi) * y * z,
+        0.25 * np.sqrt(5 / np.pi) * (3 * z * z - 1.0),
+        0.5 * np.sqrt(15 / np.pi) * x * z,
+        0.25 * np.sqrt(15 / np.pi) * (x * x - y * y),
+    ]
+    return np_mod.stack(out, axis=-1)
+
+
+@lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """G[i, j, k] = ∫ Y_i Y_j Y_k dΩ over the 9-dim l≤2 basis (numpy)."""
+    n_theta, n_phi = 128, 256
+    # Gauss-Legendre in cos(theta)
+    ct, wt = np.polynomial.legendre.leggauss(n_theta)
+    phi = (np.arange(n_phi) + 0.5) * (2 * np.pi / n_phi)
+    wp = 2 * np.pi / n_phi
+    st = np.sqrt(1 - ct ** 2)
+    xyz = np.stack(
+        [st[:, None] * np.cos(phi)[None, :],
+         st[:, None] * np.sin(phi)[None, :],
+         np.broadcast_to(ct[:, None], (n_theta, n_phi))], axis=-1)
+    ys = real_sph_harm_l2(xyz, np_mod=np)          # (T, P, 9)
+    w = wt[:, None] * wp                           # (T, 1)
+    g = np.einsum("tpi,tpj,tpk,tp->ijk", ys, ys, ys, np.broadcast_to(w, ys.shape[:2]))
+    g[np.abs(g) < 1e-10] = 0.0
+    return g
+
+
+def irrep_slices():
+    return [slice(int(IRREP_OFF[l]), int(IRREP_OFF[l + 1]))
+            for l in range(L_MAX + 1)]
+
+
+def tensor_product(a: jnp.ndarray, b: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Equivariant product: out_k = Σ_ij G[i,j,k] a_i b_j, per channel.
+
+    a, b: (..., 9, C); g: (9, 9, 9) → (..., 9, C). The Gaunt contraction is
+    the real-basis CG coupling truncated back to l ≤ 2."""
+    return jnp.einsum("ijk,...ic,...jc->...kc", jnp.asarray(g, a.dtype), a, b)

@@ -1,0 +1,241 @@
+"""Shared neural building blocks (functional, pytree params, no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays (stored fp32, cast to the compute
+    dtype inside forward),
+  * layer-stacked weights carry a leading n_layers dim for lax.scan,
+  * all attention is blockwise (flash-style log-sum-exp streaming over KV
+    chunks) so 32k-token prefill never materialises an S×S score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight + bias
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float, rotary_dims: Optional[int] = None):
+    d_rot = rotary_dims or d_head
+    inv = 1.0 / (theta ** (np.arange(0, d_rot, 2, dtype=np.float32) / d_rot))
+    return jnp.asarray(inv)  # (d_rot/2,)
+
+
+def apply_rope(x, positions, inv_freq, rotary_dims: Optional[int] = None):
+    """x: (B, S, H, D); positions: (B, S) int32. GPT-NeoX rotate-half on the
+    first `rotary_dims` dims (partial rotary, ChatGLM-style, when < D)."""
+    b, s, h, d = x.shape
+    d_rot = rotary_dims or d
+    ang = positions[..., None].astype(jnp.float32) * inv_freq[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :d_rot].astype(jnp.float32)
+    x1, x2 = xr[..., : d_rot // 2], xr[..., d_rot // 2:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = jnp.concatenate([rot.astype(x.dtype), x[..., d_rot:]], axis=-1)
+    return out
+
+
+def rope_positions_2d(b, s, prefix_len: Optional[int] = None):
+    """ChatGLM 2-D RoPE position channels: (pos_channel, block_channel).
+
+    For pure causal LM data the block channel is zeros (no prefix part);
+    the two channels drive the two halves of the rotary dims."""
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    blk = jnp.zeros((b, s), jnp.int32)
+    return pos, blk
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure JAX, no S×S materialisation
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask, scale):
+    """q: (B, H, Sq, D), k/v: (B, H, Skb, D), mask: (B, 1|H, Sq, Skb)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        window: Optional[int] = None, kv_block: int = 1024,
+                        valid_kv: Optional[jnp.ndarray] = None,
+                        unroll: bool = False, remat_blocks: bool = False):
+    """Streaming softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (same head count — GQA expansion is
+    done by the caller). Scans KV blocks carrying (acc, max, sum); memory is
+    O(Sq·kv_block) instead of O(Sq·Sk).
+
+    `window`: sliding-window attention width (Mistral/Mixtral SWA) — queries
+    attend to keys in (pos_q - window, pos_q].
+    `valid_kv`: (B, Sk) bool mask for ragged/rolling caches.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    qt = jnp.swapaxes(q, 1, 2)                   # (B, H, Sq, D)
+    kv_block = min(kv_block, sk)
+    n_blocks = -(-sk // kv_block)
+    sk_pad = n_blocks * kv_block
+    if sk_pad != sk:
+        pad = ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        pad_valid = jnp.arange(sk_pad) < sk
+    else:
+        pad_valid = None
+
+    kb = jnp.swapaxes(k, 1, 2).reshape(b, h, n_blocks, kv_block, d)
+    vb = jnp.swapaxes(v, 1, 2).reshape(b, h, n_blocks, kv_block, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, blk):
+        acc, m_run, l_run = carry
+        kblk, vblk, blk_idx = blk
+        k_pos = blk_idx * kv_block + jnp.arange(kv_block)
+        # build the mask at batch-1 unless a batch-dependent validity mask
+        # exists — a (B, 1, Sq, KV) bool would be materialised per block and
+        # (worse) hoisted out of the scan as a stacked (n_blocks, B, ...)
+        # buffer by XLA's loop-invariant motion.
+        mask = jnp.ones((1, 1, sq, kv_block), bool)
+        if causal:
+            mask &= (q_pos[:, None] >= k_pos[None, :])[None, None]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :] < window)[None, None]
+        if pad_valid is not None:
+            mask &= pad_valid[k_pos][None, None, None, :]
+        if valid_kv is not None:
+            vk = jnp.take(valid_kv, jnp.clip(k_pos, 0, sk - 1), axis=1)
+            mask = mask & vk[:, None, None, :]
+        o, m, l = _attend_block(qt, kblk, vblk, mask, scale)
+        m_new = jnp.maximum(m_run, m)
+        alpha = jnp.exp(m_run - m_new)
+        beta = jnp.exp(m - m_new)
+        acc = acc * alpha[..., None] + o * beta[..., None]
+        l_new = l_run * alpha + l * beta
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    kb_s = jnp.moveaxis(kb, 2, 0)
+    vb_s = jnp.moveaxis(vb, 2, 0)
+    if remat_blocks:
+        # flash-style backward: recompute block scores/probabilities in the
+        # bwd pass instead of letting scan save the (n_blocks, B, H, Sq, KV)
+        # probability stacks as residuals
+        body = jax.checkpoint(body)
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (kb_s, vb_s, jnp.arange(n_blocks)),
+        unroll=n_blocks if unroll else 1)
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return jnp.swapaxes(out.astype(q.dtype), 1, 2)   # (B, Sq, H, D)
+
+
+def repeat_kv(x, n_rep: int):
+    """(B, S, KV, D) -> (B, S, KV*n_rep, D), kv head h serves q heads
+    [h*n_rep, (h+1)*n_rep)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, d)
+                            ).reshape(b, s, kv * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# FFN: GLU (dense) + GShard-style top-k MoE
+# ---------------------------------------------------------------------------
+
+def glu_ffn(x, w_in, w_gate, w_out, act: str = "silu", hint=None):
+    h = jnp.einsum("bsd,df->bsf", x, w_in.astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    if hint is not None:            # Megatron-TP: (B, S, F) sharded on F
+        h, g = hint(h), hint(g)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("bsf,fd->bsd", h * g, w_out.astype(x.dtype))
+
+
+def moe_ffn(x, router_w, w_in, w_gate, w_out, *, top_k: int,
+            capacity_factor: float = 1.25, group_size: int = 1024,
+            act: str = "silu"):
+    """GShard/Mixtral top-k MoE with grouped capacity dispatch.
+
+    x: (B, S, D); router_w: (D, E); expert weights: (E, D, F) / (E, F, D).
+    Tokens are processed in groups so dispatch tensors stay bounded; experts
+    are a sharded leading dim (EP over 'model' when E divides the axis,
+    otherwise F is sharded — see repro/sharding/lm.py).
+    Returns (y, aux_loss).
+    """
+    b, s, d = x.shape
+    e = router_w.shape[1]
+    t = b * s
+    g = max(t // group_size, 1)
+    gs = t // g
+    xg = x.reshape(g, gs, d)
+    logits = jnp.einsum("gtd,de->gte", xg, router_w.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # aux load-balance loss (Switch): E * mean(fraction) . mean(prob)
+    me = jnp.mean(probs, axis=1)                              # (G, E)
+    gates, top_idx = jax.lax.top_k(probs, top_k)              # (G, T, K)
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)    # (G, T, K, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=1)            # (G, E)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e
+
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(np.ceil(gs * top_k * capacity_factor / e))
+    # position of each (token, k) within its expert queue
+    flat_assign = onehot                                      # (G,T,K,E)
+    pos = (jnp.cumsum(flat_assign.reshape(g, gs * top_k, e), axis=1)
+           - flat_assign.reshape(g, gs * top_k, e))
+    pos = pos.reshape(g, gs, top_k, e)
+    keep = flat_assign * (pos < capacity)
+    pos_onehot = jax.nn.one_hot(
+        jnp.sum(pos * flat_assign, axis=-1).astype(jnp.int32),
+        capacity, dtype=jnp.float32)                          # (G,T,K,C)
+    # dispatch: (G, T, E, C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", keep, pos_onehot)
+    combine = jnp.einsum("gtke,gtk,gtkc->gtec", keep,
+                         gates.astype(jnp.float32), pos_onehot)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    hh = jnp.einsum("gecd,edf->gecf", xe, w_in.astype(x.dtype))
+    gg = jnp.einsum("gecd,edf->gecf", xe, w_gate.astype(x.dtype))
+    gg = jax.nn.silu(gg) if act == "silu" else jax.nn.gelu(gg)
+    ye = jnp.einsum("gecf,efd->gecd", hh * gg, w_out.astype(x.dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    return y.reshape(b, s, d), aux

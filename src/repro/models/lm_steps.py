@@ -1,0 +1,80 @@
+"""Jit-able step functions for LM training and serving."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: T.TransformerConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    lr: float = 3e-4):
+    """Returns train_step(params, opt_state, tokens, targets) -> (params, opt, loss)."""
+
+    def train_step(params, opt_state, tokens, targets):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.lm_loss(cfg, p, tokens, targets))(params)
+        params, opt_state = adamw_update(params, grads, opt_state,
+                                         jnp.float32(lr), opt_cfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: T.TransformerConfig):
+    """prefill(params, tokens) -> (last-token logits, kv cache).
+
+    Builds the cache with one full forward (training-mode attention), then
+    packs per-layer K/V. Rolling SWA caches keep the trailing window."""
+
+    def prefill(params, tokens):
+        b, s = tokens.shape
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"][tokens].astype(dt)
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(x, lp):
+            x2, _, kv = T._layer(cfg, lp, x, positions)
+            k, v = kv
+            c = T.cache_len(cfg, s)
+            if c != s:
+                # rolling buffer layout: entry for absolute position p lives
+                # in slot p % c; the last c tokens occupy the buffer
+                k = _roll_pack(k, c)
+                v = _roll_pack(v, c)
+            return x2, (k, v)
+
+        x, kvs = jax.lax.scan(body, x, params["layers"],
+                              unroll=cfg.n_layers if cfg.unroll_scans else 1)
+        x = L_rms(x, params["ln_final"], cfg.norm_eps)
+        head = params.get("lm_head",
+                          params["embed"].T if cfg.tie_embeddings else None)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(dt))
+        cache = dict(k=kvs[0], v=kvs[1], pos=jnp.int32(s))
+        return logits.astype(jnp.float32), cache
+
+    return prefill
+
+
+def _roll_pack(k, c):
+    """Keep the last c positions, placed at slot (abs_pos % c)."""
+    s = k.shape[1]
+    tail = k[:, s - c:]
+    offset = (s - c) % c
+    return jnp.roll(tail, shift=offset, axis=1)
+
+
+def L_rms(x, w, eps):
+    from repro.models.layers import rms_norm
+    return rms_norm(x, w, eps)
+
+
+def make_decode_step(cfg: T.TransformerConfig):
+    def decode(params, cache, token):
+        return T.decode_step(cfg, params, cache, token)
+    return decode

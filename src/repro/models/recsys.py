@@ -1,0 +1,265 @@
+"""Two-tower retrieval model (YouTube DNN / RecSys'19 lineage).
+
+Architecture (assigned config): embed_dim=256, tower MLP 1024-512-256,
+dot-product interaction, sampled-softmax retrieval with in-batch negatives.
+
+Substrate notes (per the brief): the hot path is the sparse embedding
+LOOKUP over huge tables. JAX has no native EmbeddingBag — we implement it as
+``jnp.take`` + ``jax.ops.segment_sum`` (multi-valued bag features), with the
+Pallas one-hot-GEMM kernel (repro/kernels/embedding_bag) as the TPU MXU path
+for per-device table shards. Tables are row-sharded over the "model" mesh
+axis (mod sharding); GSPMD turns the cross-shard take into an all-to-all —
+exactly the production layout of TF DLRM / TorchRec row-wise sharding.
+
+Feature schema (fixed, production-plausible):
+  user tower:  user_id (1-hot, huge table), user_geo (1-hot),
+               user_hist (bag of item ids, shares the item_id table),
+               user_dense (16 floats)
+  item tower:  item_id (1-hot, huge table), item_cat (1-hot),
+               item_tags (bag, small table)
+
+``retrieval_cand`` scores one query against n_candidates=1e6 precomputed
+item embeddings via a single batched dot + top-k (no loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256                     # final tower output dim
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    interaction: str = "dot"
+    # sparse feature tables: rows × dim
+    n_users: int = 1 << 25                   # 33.5M user ids
+    n_items: int = 1 << 24                   # 16.7M item ids
+    n_geo: int = 100_000
+    n_tags: int = 100_000
+    d_id: int = 128                          # id-table embedding dim
+    d_small: int = 32                        # small-table embedding dim
+    d_dense: int = 16                        # dense float features
+    hist_len: int = 32                       # user history bag length
+    tags_len: int = 8                        # item tag bag length
+    temperature: float = 0.05
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        emb = (self.n_users * self.d_id + self.n_items * self.d_id
+               + self.n_geo * self.d_small + self.n_tags * self.d_small)
+        u_in = self.d_id + self.d_id + self.d_small + self.d_dense
+        i_in = self.d_id + self.d_small
+        mlp = 0
+        for d_in, tower_in in ((u_in, True), (i_in, False)):
+            dims = (d_in,) + self.tower_mlp
+            mlp += sum(dims[i] * dims[i + 1] + dims[i + 1]
+                       for i in range(len(dims) - 1))
+        return emb + mlp
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag: jnp.take + segment_sum  (THE substrate op; see module doc)
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  mode: str = "mean") -> jnp.ndarray:
+    """table: (V, D); ids: (B, L) int32, -1 = padding. Returns (B, D).
+
+    Pure-jnp EmbeddingBag: gather rows, mask pads, reduce the bag axis.
+    (segment_sum formulation: the bag axis IS the segment; a dense reshape
+    reduce is identical and layout-friendlier on TPU.)
+    """
+    b, l = ids.shape
+    valid = (ids >= 0)
+    safe = jnp.where(valid, ids, 0)
+    rows = jnp.take(table, safe, axis=0)                 # (B, L, D)
+    rows = rows * valid[..., None].astype(rows.dtype)
+    if mode == "sum":
+        return rows.sum(axis=1)
+    cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(rows.dtype)
+    return rows.sum(axis=1) / cnt
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Single-valued categorical lookup: (B,) -> (B, D)."""
+    return jnp.take(table, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Params / towers
+# ---------------------------------------------------------------------------
+
+def _mlp_params(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"w{i}": dense_init(ks[i], (dims[i], dims[i + 1]))
+            for i in range(len(dims) - 1)} | \
+           {f"b{i}": jnp.zeros((dims[i + 1],)) for i in range(len(dims) - 1)}
+
+
+def _mlp(p, x):
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"].astype(x.dtype) + p[f"b{i}"].astype(x.dtype)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(cfg: TwoTowerConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    u_in = cfg.d_id + cfg.d_id + cfg.d_small + cfg.d_dense
+    i_in = cfg.d_id + cfg.d_small
+    return dict(
+        user_id_table=dense_init(ks[0], (cfg.n_users, cfg.d_id), scale=0.02),
+        item_id_table=dense_init(ks[1], (cfg.n_items, cfg.d_id), scale=0.02),
+        geo_table=dense_init(ks[2], (cfg.n_geo, cfg.d_small), scale=0.02),
+        tag_table=dense_init(ks[3], (cfg.n_tags, cfg.d_small), scale=0.02),
+        user_mlp=_mlp_params(ks[4], (u_in,) + cfg.tower_mlp),
+        item_mlp=_mlp_params(ks[5], (i_in,) + cfg.tower_mlp),
+    )
+
+
+def user_tower(cfg: TwoTowerConfig, params, batch) -> jnp.ndarray:
+    """batch: user_id (B,), user_geo (B,), user_hist (B, L), user_dense (B, Dd)."""
+    dt = jnp.dtype(cfg.dtype)
+    uid = embedding_lookup(params["user_id_table"], batch["user_id"]).astype(dt)
+    geo = embedding_lookup(params["geo_table"], batch["user_geo"]).astype(dt)
+    hist = embedding_bag(params["item_id_table"], batch["user_hist"]).astype(dt)
+    x = jnp.concatenate([uid, hist, geo, batch["user_dense"].astype(dt)], -1)
+    u = _mlp(params["user_mlp"], x)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def item_tower(cfg: TwoTowerConfig, params, batch, prefix: str = "item") -> jnp.ndarray:
+    """batch: {prefix}_id (B,), {prefix}_tags (B, Lt)."""
+    dt = jnp.dtype(cfg.dtype)
+    iid = embedding_lookup(params["item_id_table"], batch[f"{prefix}_id"]).astype(dt)
+    tags = embedding_bag(params["tag_table"], batch[f"{prefix}_tags"]).astype(dt)
+    x = jnp.concatenate([iid, tags], -1)
+    v = _mlp(params["item_mlp"], x)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Training: sampled softmax with in-batch negatives
+# ---------------------------------------------------------------------------
+
+def retrieval_loss(cfg: TwoTowerConfig, params, batch) -> jnp.ndarray:
+    """In-batch sampled softmax: positives on the diagonal of U @ I^T."""
+    u = user_tower(cfg, params, batch)                       # (B, D)
+    v = item_tower(cfg, params, batch)                       # (B, D)
+    logits = (u @ v.T) / cfg.temperature                     # (B, B)
+    b = logits.shape[0]
+    # log-Q correction for in-batch sampling bias (uniform proxy): constant
+    # shift — omitted (uniform negatives); labels are the diagonal.
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(
+        logp, jnp.arange(b)[:, None], axis=-1))
+
+
+def make_train_step(cfg: TwoTowerConfig, opt_cfg=None, lr: float = 1e-3):
+    from repro.optim import AdamWConfig, adamw_update
+    opt_cfg = opt_cfg or AdamWConfig(weight_decay=0.0)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: retrieval_loss(cfg, p, batch))(params)
+        params, opt_state = adamw_update(params, grads, opt_state,
+                                         jnp.float32(lr), opt_cfg)
+        return params, opt_state, loss
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: TwoTowerConfig):
+    """Online scoring: user tower + dot against per-request candidate embs."""
+
+    def serve_step(params, batch):
+        u = user_tower(cfg, params, batch)                   # (B, D)
+        cand = batch["cand_emb"]                             # (B, C, D)
+        return jnp.einsum("bd,bcd->bc", u, cand.astype(u.dtype))
+    return serve_step
+
+
+def make_bulk_score_step(cfg: TwoTowerConfig):
+    """Offline scoring: full forward of both towers + elementwise dot."""
+
+    def bulk_step(params, batch):
+        u = user_tower(cfg, params, batch)
+        v = item_tower(cfg, params, batch)
+        return jnp.sum(u * v, axis=-1)
+    return bulk_step
+
+
+def make_retrieval_step(cfg: TwoTowerConfig, top_k: int = 100):
+    """One query vs n_candidates≈1e6: item tower over the candidate corpus
+    shard + batched dot + global top-k. No loop over candidates."""
+
+    def retrieval_step(params, batch):
+        u = user_tower(cfg, params, batch)                   # (1, D)
+        v = item_tower(cfg, params, batch, prefix="cand")    # (C, D)
+        scores = (v @ u[0]).astype(jnp.float32)              # (C,)
+        return jax.lax.top_k(scores, top_k)
+    return retrieval_step
+
+
+# ---------------------------------------------------------------------------
+# Synthetic batches + ShapeDtypeStruct specs (dry-run)
+# ---------------------------------------------------------------------------
+
+def synth_batch(cfg: TwoTowerConfig, batch: int, seed: int = 0,
+                with_items: bool = True) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = dict(
+        user_id=rng.integers(0, cfg.n_users, batch).astype(np.int32),
+        user_geo=rng.integers(0, cfg.n_geo, batch).astype(np.int32),
+        user_hist=np.where(
+            rng.random((batch, cfg.hist_len)) < 0.8,
+            rng.integers(0, cfg.n_items, (batch, cfg.hist_len)), -1
+        ).astype(np.int32),
+        user_dense=rng.normal(size=(batch, cfg.d_dense)).astype(np.float32),
+    )
+    if with_items:
+        out["item_id"] = rng.integers(0, cfg.n_items, batch).astype(np.int32)
+        out["item_tags"] = np.where(
+            rng.random((batch, cfg.tags_len)) < 0.7,
+            rng.integers(0, cfg.n_tags, (batch, cfg.tags_len)), -1
+        ).astype(np.int32)
+    return out
+
+
+def batch_spec(cfg: TwoTowerConfig, kind: str, batch: int,
+               n_candidates: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    f32, i32 = jnp.float32, jnp.int32
+    user = dict(
+        user_id=jax.ShapeDtypeStruct((batch,), i32),
+        user_geo=jax.ShapeDtypeStruct((batch,), i32),
+        user_hist=jax.ShapeDtypeStruct((batch, cfg.hist_len), i32),
+        user_dense=jax.ShapeDtypeStruct((batch, cfg.d_dense), f32),
+    )
+    if kind == "train" or kind == "bulk":
+        return user | dict(
+            item_id=jax.ShapeDtypeStruct((batch,), i32),
+            item_tags=jax.ShapeDtypeStruct((batch, cfg.tags_len), i32),
+        )
+    if kind == "serve":
+        return user | dict(
+            cand_emb=jax.ShapeDtypeStruct(
+                (batch, 256, cfg.tower_mlp[-1]), f32))
+    if kind == "retrieval":
+        return user | dict(
+            cand_id=jax.ShapeDtypeStruct((n_candidates,), i32),
+            cand_tags=jax.ShapeDtypeStruct((n_candidates, cfg.tags_len), i32),
+        )
+    raise ValueError(kind)

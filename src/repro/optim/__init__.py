@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_warmup
+from repro.optim.compress import ef_int8_allreduce, ef_state_init
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_warmup",
+    "ef_int8_allreduce", "ef_state_init",
+]

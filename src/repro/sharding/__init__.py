@@ -1,0 +1,3 @@
+from repro.sharding.lm import lm_sharding, LMSharding, opt_state_specs  # noqa: F401
+from repro.sharding.gnn import gnn_sharding, GNNSharding  # noqa: F401
+from repro.sharding.recsys import recsys_sharding, RecsysSharding  # noqa: F401

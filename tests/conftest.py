@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run on the single real CPU device. The 512-device override is ONLY
+# for the dry-run (tests that need virtual devices spawn subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

