@@ -8,7 +8,7 @@ on top of each recursion backend. Wall time excludes jit compilation
 from __future__ import annotations
 
 from benchmarks.common import GRAPH_SUITE, Csv, timed
-from repro.core import bitset_engine
+from repro.core import engine as bitset_engine
 
 BACKENDS = ("pivot", "rcd", "revised")
 

@@ -22,7 +22,7 @@ def run(out_json: str | None = None):
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.core.bitset_engine import EngineConfig
+    from repro.core.engine import EngineConfig
     from repro.core.driver import _sharded_counts
     from repro.launch.hlo_cost import analyze
     from repro.launch.mesh import data_axes, make_production_mesh

@@ -7,7 +7,7 @@ Variant3 = no maximality-check reduction. Times from the bitset engine
 from __future__ import annotations
 
 from benchmarks.common import GRAPH_SUITE, Csv, timed
-from repro.core import bitset_engine
+from repro.core import engine as bitset_engine
 
 VARIANTS = [
     ("RMCEdegen", dict(global_red=True, dynamic_red=True, x_red=True)),

@@ -11,7 +11,7 @@ import os
 import tempfile
 import time
 
-from repro.core.bitset_engine import EngineConfig
+from repro.core.engine import EngineConfig
 from repro.core.driver import DistributedMCE
 from repro.graph import kronecker
 

@@ -13,7 +13,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitset_engine
+from repro.core import engine as bitset_engine
 from repro.core.global_reduction import global_reduce_host
 from repro.graph import caveman
 from repro.models.gnn_steps import batch_from_graph, make_gnn_train_step

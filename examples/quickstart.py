@@ -8,7 +8,7 @@ and enumerate the actual cliques of a small subgraph.
 """
 import time
 
-from repro.core import bitset_engine
+from repro.core import engine as bitset_engine
 from repro.core.global_reduction import global_reduce_host
 from repro.graph import barabasi_albert, degeneracy_order
 

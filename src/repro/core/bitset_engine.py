@@ -1,635 +1,23 @@
-"""TPU-native bitset Bron–Kerbosch engine with the paper's RMCE reductions.
+"""Compatibility shim — the engine now lives in `repro.core.engine`.
 
-The CPU paper's recursive, pointer-chasing search is re-derived as fixed-shape
-bitset dataflow (see DESIGN.md §2):
+The monolithic TPU bitset Bron–Kerbosch engine was split into layered
+modules (DESIGN.md §2): `engine.prepare` (host-side packing/bucketing),
+`engine.frames` (frame/stack layout + config), `engine.reductions`
+(dynamic-reduction lemmas), `engine.pivot` (pivot strategies), and
+`engine.loop` (the `lax.while_loop` DFS driver + `run()`); all bitset set
+algebra dispatches through `repro.kernels.bitset_ops.ops` (DESIGN.md §3).
 
-* Per root v (degeneracy order), the *local universe* is N⁺(v) (size ≤ λ),
-  packed into W = ⌈U/32⌉ uint32 words.
-* `A` (U, W): induced adjacency bitsets among the universe.
-* The forbidden set is split in two parts:
-    - X0 rows (XC, W): P-neighbourhood bitsets of surviving earlier
-      neighbours (after the ignoreId maximality-check reduction) with a
-      per-frame alive mask. Earlier neighbours with an empty P-neighbourhood
-      can never witness anything this root could report; dropped at prep.
-    - Xp (W,): universe members moved into X (classic BK "visited" bits plus
-      the dynamic-reduction advance-reported vertices).
-* The recursion is an explicit DFS stack advanced by `lax.while_loop`; every
-  paper reduction becomes bitset algebra (deg_P = popcount(A & P) rows — the
-  paper's set-intersection hot spot, Pallas kernel on TPU).
-* vmap over roots; buckets of padded (U, XC) shapes; shard_map over the mesh
-  in `repro.core.driver`.
-
-Counting is always on; enumeration into a bounded buffer is optional
-(`out_cap > 0`) with an overflow flag.
+This module only re-exports the public API so existing imports keep
+working. New code should import from `repro.core.engine` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from functools import partial
-from typing import Dict, List, Optional, Sequence, Set, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.graph.csr import CSRGraph
-from repro.graph.order import degeneracy_order
-from repro.kernels.bitset_ops import ref as bitref
-
-WORD = 32
-U32 = jnp.uint32
-FULL = jnp.uint32(0xFFFFFFFF)
-
-
-# ===========================================================================
-# Host-side preparation
-# ===========================================================================
-
-@dataclasses.dataclass
-class RootBucket:
-    """Fixed-shape batch of root subproblems sharing one padding."""
-
-    u_pad: int                      # padded universe size (multiple of 32)
-    x_pad: int                      # padded X0 row count
-    a: np.ndarray                   # (R, U, W) uint32 induced adjacency
-    p0: np.ndarray                  # (R, W) uint32 initial candidate bitset
-    x_rows: np.ndarray              # (R, XC, W) uint32 X0 row bitsets
-    x_alive0: np.ndarray            # (R, XC) bool
-    roots: np.ndarray               # (R,) int64 original vertex ids
-    rsz0: np.ndarray                # (R,) int32 |R| at entry (>1 for split roots)
-    bases: List[tuple]              # per-root base clique vertices
-    universes: List[np.ndarray]     # per-root local->global id maps
-
-    @property
-    def num_roots(self) -> int:
-        return len(self.roots)
-
-
-@dataclasses.dataclass
-class PreparedMCE:
-    buckets: List[RootBucket]
-    pre_reported: List[frozenset]
-    n: int
-    degeneracy: int
-    order: np.ndarray
-    rank: np.ndarray
-
-
-def _pack_bits(ids: np.ndarray, words: int) -> np.ndarray:
-    out = np.zeros(words, dtype=np.uint32)
-    if len(ids):
-        np.bitwise_or.at(out, ids // WORD,
-                         np.uint32(1) << (ids % WORD).astype(np.uint32))
-    return out
-
-
-def _stage_subproblem(staged, bucket_sizes, base, p_set, x_set,
-                      adj_sorted, rank):
-    """Pack one (R=base, P=p_set, X=x_set) subproblem into its bucket."""
-    p_ids = np.array(sorted(p_set, key=lambda u: rank[u]), dtype=np.int64)
-    u_size = len(p_ids)
-    bucket = next((b for b in bucket_sizes if u_size <= b), None)
-    if bucket is None:
-        raise ValueError(f"universe {u_size} exceeds largest bucket")
-    words = bucket // WORD
-    a_rows = np.zeros((bucket, words), dtype=np.uint32)
-    for j, u in enumerate(p_ids):
-        mask = np.isin(p_ids, adj_sorted[int(u)], assume_unique=True)
-        a_rows[j] = _pack_bits(np.nonzero(mask)[0].astype(np.int64), words)
-    xr = []
-    for x in sorted(x_set, key=lambda u: rank[u]):
-        mask = np.isin(p_ids, adj_sorted[int(x)], assume_unique=True)
-        if mask.any():
-            xr.append(_pack_bits(np.nonzero(mask)[0].astype(np.int64), words))
-    staged[bucket].append(dict(
-        root=base[0], base=tuple(base),
-        p0=_pack_bits(np.arange(u_size), words), a=a_rows,
-        x_rows=xr, universe=p_ids))
-
-
-def _split_root(v, p_ids, x_set, adj, rank):
-    """Expand root (R={v}, P, X) one pivot-pruned BK level on the host.
-
-    Yields (base=(v, w), P_w, X_w) per branch vertex w — identical semantics
-    to one level of Algorithm 2, so clique sets are preserved exactly."""
-    p_set = set(p_ids.tolist())
-    pool = p_set | x_set
-    pivot = max(pool, key=lambda u: (len(adj[u] & p_set), -rank[u]))
-    branch = [w for w in p_ids.tolist() if w not in adj[pivot]]
-    p_cur = set(p_set)
-    x_cur = set(x_set)
-    for w in branch:
-        p_cur.discard(w)
-        yield (v, w), p_cur & adj[w], x_cur & adj[w]
-        x_cur.add(w)
-
-
-def prepare(g: CSRGraph, *, global_red: bool = True, x_red: bool = True,
-            bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
-            max_x_rows: int = 8192,
-            split_threshold: Optional[int] = None) -> PreparedMCE:
-    """Host preprocessing: reductions, ordering, bitset packing, bucketing.
-
-    split_threshold: straggler mitigation by over-decomposition — roots with
-    |P| > threshold are expanded ONE BK level on the host (pivot-pruned
-    branching, exactly Algorithm 2's first level) into per-branch
-    subproblems with |R|=2. The search tree is re-dealt at a finer grain so
-    one pathological hub cannot stall its whole shard (DESIGN.md §5)."""
-    pre_reported: List[frozenset] = []
-    if global_red:
-        from repro.core.global_reduction import global_reduce_host
-
-        red = global_reduce_host(g)
-        g_work = red.graph
-        pre_reported = list(red.reported)
-    else:
-        g_work = g
-
-    order, rank, lam = degeneracy_order(g_work)
-    adj = [set(g_work.neighbors(v).tolist()) for v in range(g_work.n)]
-    adj_sorted = [g_work.neighbors(v) for v in range(g_work.n)]
-
-    kept_x: Optional[List[Set[int]]] = None
-    if x_red:
-        from repro.core.xreduction import x_prune_roots
-
-        kept_x = x_prune_roots(adj, order, rank)
-
-    staged: Dict[int, List[dict]] = {b: [] for b in bucket_sizes}
-    for i in range(g_work.n):
-        v = int(order[i])
-        if not adj[v]:
-            continue
-        p_ids = np.array(sorted((u for u in adj[v] if rank[u] > i),
-                                key=lambda u: rank[u]), dtype=np.int64)
-        if len(p_ids) == 0:
-            continue  # all its cliques are found from earlier roots
-        u_size = len(p_ids)
-        bucket = next((b for b in bucket_sizes if u_size <= b), None)
-        if bucket is None:
-            raise ValueError(f"universe {u_size} exceeds largest bucket")
-        x_set = kept_x[i] if kept_x is not None else {u for u in adj[v]
-                                                      if rank[u] < i}
-        if split_threshold is not None and u_size > split_threshold:
-            for base, p_sub, x_sub in _split_root(v, p_ids, x_set, adj, rank):
-                if not p_sub:
-                    if not x_sub:
-                        pre_reported.append(frozenset(base))
-                    continue
-                _stage_subproblem(staged, bucket_sizes, base, p_sub, x_sub,
-                                  adj_sorted, rank)
-            continue
-        _stage_subproblem(staged, bucket_sizes, (v,), set(p_ids.tolist()),
-                          x_set, adj_sorted, rank)
-
-    buckets: List[RootBucket] = []
-    for b in bucket_sizes:
-        items = staged[b]
-        if not items:
-            continue
-        xc = max(max((len(it["x_rows"]) for it in items), default=0), 1)
-        xc = 1 << (xc - 1).bit_length()     # pow2 pad: bounded recompile count
-        if xc > max_x_rows:
-            raise ValueError(f"X0 rows {xc} exceed cap {max_x_rows}")
-        words = b // WORD
-        r = len(items)
-        a = np.zeros((r, b, words), dtype=np.uint32)
-        p0 = np.zeros((r, words), dtype=np.uint32)
-        x_rows = np.zeros((r, xc, words), dtype=np.uint32)
-        x_alive = np.zeros((r, xc), dtype=bool)
-        roots = np.zeros(r, dtype=np.int64)
-        rsz0 = np.ones(r, dtype=np.int32)
-        bases = []
-        universes = []
-        for k, it in enumerate(items):
-            a[k] = it["a"]
-            p0[k] = it["p0"]
-            for j, row in enumerate(it["x_rows"]):
-                x_rows[k, j] = row
-                x_alive[k, j] = True
-            roots[k] = it["root"]
-            base = it.get("base", (it["root"],))
-            bases.append(base)
-            rsz0[k] = len(base)
-            universes.append(it["universe"])
-        buckets.append(RootBucket(u_pad=b, x_pad=xc, a=a, p0=p0, x_rows=x_rows,
-                                  x_alive0=x_alive, roots=roots, rsz0=rsz0,
-                                  bases=bases, universes=universes))
-    return PreparedMCE(buckets=buckets, pre_reported=pre_reported, n=g.n,
-                       degeneracy=lam, order=order, rank=rank)
-
-
-# ===========================================================================
-# Small bitset helpers (device)
-# ===========================================================================
-
-def _popcount(bits):
-    return jnp.sum(jax.lax.population_count(bits), axis=-1).astype(jnp.int32)
-
-
-def _any_bit(bits):
-    return jnp.any(bits != 0, axis=-1)
-
-
-def _first_bit_index(bits):
-    nz = bits != 0
-    w = jnp.argmax(nz)
-    word = bits[w]
-    low = word & (U32(0) - word)
-    pos = jax.lax.population_count(low - U32(1))
-    return (w * WORD + pos).astype(jnp.int32)
-
-
-def _test_bit(bits, index):
-    word = bits[index // WORD]
-    return ((word >> (index % WORD).astype(U32)) & U32(1)) != 0
-
-
-def _bitset_to_mask(bits, u):
-    idx = jnp.arange(u)
-    words = bits[idx // WORD]
-    return ((words >> (idx % WORD).astype(U32)) & U32(1)) != 0
-
-
-def _eye_bits(u, words):
-    """(U, W) constant: EYE[i] = bitset with only bit i."""
-    idx = jnp.arange(u)
-    col = jnp.arange(words)
-    return jnp.where(col[None, :] == (idx[:, None] // WORD),
-                     U32(1) << (idx[:, None] % WORD).astype(U32), U32(0))
-
-
-def _mask_to_bitset(mask, words, eye):
-    return jnp.bitwise_or.reduce(
-        jnp.where(mask[:, None], eye, U32(0)), axis=0)
-
-
-def _or_reduce(rows, sel):
-    return jnp.bitwise_or.reduce(
-        jnp.where(sel[:, None], rows, U32(0)), axis=0)
-
-
-def _and_reduce(rows, sel):
-    return jnp.bitwise_and.reduce(
-        jnp.where(sel[:, None], rows, FULL), axis=0)
-
-
-def _single_bit_index_rows(rows):
-    nz = rows != 0
-    word_idx = jnp.argmax(nz, axis=1)
-    word = jnp.take_along_axis(rows, word_idx[:, None], axis=1)[:, 0]
-    low = word & (U32(0) - word)
-    pos = jax.lax.population_count(low - U32(1))
-    return (word_idx * WORD + pos).astype(jnp.int32)
-
-
-# ===========================================================================
-# Engine configuration + carry
-# ===========================================================================
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    dynamic_red: bool = True
-    backend: str = "pivot"          # 'pivot' | 'rcd' | 'revised'
-    out_cap: int = 0                # >0: enumerate into a fixed buffer
-    max_iters: int = 1 << 30
-    # §Perf: reuse the post-reduction degree vector for pivot scoring via
-    # deg_P''(u) = deg_P'(u) − |full| (full vertices neighbor all of P'),
-    # eliminating one of the three AND+popcount sweeps over A per call.
-    reuse_degrees: bool = True
-
-
-def _carry_init(cfg: EngineConfig, words: int):
-    cap = max(cfg.out_cap, 1)
-    return dict(
-        cliques=jnp.int32(0),
-        calls=jnp.int32(0),
-        branches=jnp.int32(0),
-        sum_px=jnp.int32(0),
-        out_rows=jnp.zeros((cap, words), dtype=jnp.uint32),
-        out_sizes=jnp.zeros((cap,), dtype=jnp.int32),
-        out_n=jnp.int32(0),
-        overflow=jnp.bool_(False),
-    )
-
-
-def _report_single(carry, cfg, bits, size, enable):
-    cnt = enable.astype(jnp.int32)
-    carry = dict(carry, cliques=carry["cliques"] + cnt)
-    if cfg.out_cap:
-        cap = cfg.out_cap
-        pos = jnp.where(enable & (carry["out_n"] < cap), carry["out_n"], cap)
-        carry["out_rows"] = carry["out_rows"].at[pos].set(bits, mode="drop")
-        carry["out_sizes"] = carry["out_sizes"].at[pos].set(size, mode="drop")
-        carry["overflow"] = carry["overflow"] | (enable & (carry["out_n"] >= cap))
-        carry["out_n"] = jnp.minimum(carry["out_n"] + cnt, cap)
-    return carry
-
-
-def _report_multi(carry, cfg, rows, sizes, mask):
-    cnt = jnp.sum(mask.astype(jnp.int32))
-    carry = dict(carry, cliques=carry["cliques"] + cnt)
-    if cfg.out_cap:
-        cap = cfg.out_cap
-        offs = carry["out_n"] + jnp.cumsum(mask.astype(jnp.int32)) - 1
-        pos = jnp.where(mask & (offs < cap), offs, cap)
-        carry["out_rows"] = carry["out_rows"].at[pos].set(rows, mode="drop")
-        carry["out_sizes"] = carry["out_sizes"].at[pos].set(sizes, mode="drop")
-        carry["overflow"] = carry["overflow"] | jnp.any(mask & (offs >= cap))
-        carry["out_n"] = jnp.minimum(carry["out_n"] + cnt, cap)
-    return carry
-
-
-# ===========================================================================
-# Call-entry: dynamic reduction + leaf report + branch-set construction
-# ===========================================================================
-
-def _enter(carry, cfg, A, x_rows, eye, eye_x, P, Xp, xal, rsz, Rb,
-           enable=None):
-    """BK call entry for (R, P, X). Returns (carry, push?, frame).
-
-    `enable` gates every carry side-effect (counter bumps, clique reports):
-    the DFS body runs _enter unconditionally (straight-line, no lax.cond —
-    see _run_root) and masks it out on pop-only iterations."""
-    U, words = A.shape
-    XC = x_rows.shape[0]
-    enable = jnp.bool_(True) if enable is None else enable
-    en_i = enable.astype(jnp.int32)
-    carry = dict(carry, calls=carry["calls"] + en_i)
-    carry["sum_px"] = (carry["sum_px"] + (_popcount(P) + _popcount(Xp)
-                       + _popcount(xal)) * en_i)
-    xal_mask = _bitset_to_mask(xal, XC)
-
-    # ---- dynamic reduction (paper Lemmas 5, 7, 8) ----
-    if cfg.dynamic_red:
-        degP = bitref.and_popcount_rows(A, P)              # (U,)
-        in_p = _bitset_to_mask(P, U)
-        xp_mask = _bitset_to_mask(Xp, U)
-        marked_bits = _or_reduce(x_rows, xal_mask) | _or_reduce(A, xp_mask)
-        marked = _bitset_to_mask(marked_bits, U)
-
-        # dynamic degree-zero (Lemma 5)
-        deg0 = in_p & (degP == 0)
-        rep0 = deg0 & ~marked
-        carry = _report_multi(carry, cfg, Rb[None, :] | eye,
-                              jnp.full((U,), rsz + 1, jnp.int32),
-                              rep0 & enable)
-        Xp = Xp | _mask_to_bitset(rep0, words, eye)
-
-        # relaxed dynamic degree-one (Lemma 7)
-        deg1 = in_p & (degP == 1)
-        partner = _single_bit_index_rows(A & P[None, :])   # valid where deg1
-        pclip = jnp.clip(partner, 0, U - 1)
-        partner_deg1 = deg1 & deg1[pclip]
-        mutual_skip = partner_deg1 & (pclip < jnp.arange(U))
-        cond = deg1 & ~mutual_skip & (~marked | ~marked[pclip])
-        pair_rows = Rb[None, :] | eye | eye[pclip]
-        carry = _report_multi(carry, cfg, pair_rows,
-                              jnp.full((U,), rsz + 2, jnp.int32),
-                              cond & enable)
-        rem1 = cond | (partner_deg1 & cond[pclip])
-        Xp = Xp | _mask_to_bitset(rem1, words, eye)
-        removed = deg0 | rem1
-        P = P & ~_mask_to_bitset(removed, words, eye)
-
-        # dynamic degree-(|P|-1) (Lemma 8)
-        degP2 = bitref.and_popcount_rows(A, P)
-        in_p2 = _bitset_to_mask(P, U)
-        psize = _popcount(P)
-        full = in_p2 & (degP2 == psize - 1) & (psize > 0)
-        any_full = jnp.any(full)
-        n_full = jnp.sum(full.astype(jnp.int32))
-        full_bits = _mask_to_bitset(full, words, eye)
-        common = _and_reduce(A, full)                      # C(S) over universe
-        sub_ok = bitref.and_popcount_rows(jnp.bitwise_not(x_rows), full_bits) == 0
-        P, Xp, xal, Rb, rsz = (
-            jnp.where(any_full, P & ~full_bits, P),
-            jnp.where(any_full, Xp & common, Xp),
-            jnp.where(any_full, xal & _mask_to_bitset(sub_ok, eye_x.shape[1],
-                                                      eye_x), xal),
-            jnp.where(any_full, Rb | full_bits, Rb),
-            jnp.where(any_full, rsz + n_full, rsz),
-        )
-    else:
-        degP2 = None
-        n_full = jnp.int32(0)
-
-    # ---- leaf report ----
-    p_empty = ~_any_bit(P)
-    x_empty = ~_any_bit(xal) & ~_any_bit(Xp)
-    carry = _report_single(carry, cfg, Rb, rsz,
-                           p_empty & x_empty & (rsz >= 2) & enable)
-    push = ~p_empty & enable
-
-    # ---- branch set (pivot backends; rcd recomputes per visit) ----
-    if cfg.backend in ("pivot", "revised"):
-        if cfg.dynamic_red and cfg.reuse_degrees:
-            # §Perf: every `full` vertex was adjacent to ALL of P', so
-            # deg over the final P is exactly degP2 − n_full for surviving
-            # P members — reuse instead of a third AND+popcount sweep of A.
-            degP = degP2 - n_full
-        else:
-            degP = bitref.and_popcount_rows(A, P)
-        in_p = _bitset_to_mask(P, U)
-        if cfg.backend == "revised":
-            pool = in_p
-        else:
-            pool = in_p | _bitset_to_mask(Xp, U)
-        uni_scores = jnp.where(pool, degP, -1)
-        best_u = jnp.argmax(uni_scores)
-        x_scores = jnp.where(_bitset_to_mask(xal, XC),
-                             bitref.and_popcount_rows(x_rows, P), -1)
-        best_x = jnp.argmax(x_scores)
-        use_x = x_scores[best_x] > uni_scores[best_u]
-        pivot_row = jnp.where(use_x, x_rows[best_x], A[best_u])
-        B = P & ~pivot_row
-    else:
-        B = jnp.zeros_like(P)
-    return carry, push, (P, B, Xp, Rb, rsz, xal)
-
-
-# ===========================================================================
-# Per-root DFS driver
-# ===========================================================================
-
-def _run_root(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
-    """Run the full BK subtree of one root. Returns the final carry dict.
-
-    The X0 alive set is carried as a PACKED BITSET (§Perf iteration 3):
-    the bool stack (D, XC) dominated the while carry traffic 8:1."""
-    U, words = a.shape
-    XC = x_rows.shape[0]
-    xc_words = max(-(-XC // WORD), 1)
-    D = U + 2
-    eye = _eye_bits(U, words)
-    eye_x = _eye_bits(XC, xc_words)
-    xal_bits0 = _mask_to_bitset(x_alive0, xc_words, eye_x)
-
-    carry0 = _carry_init(cfg, words)
-    # root frame: R = {v} (rsz=1), Rb covers universe additions only
-    carry0, push0, frame0 = _enter(
-        carry0, cfg, a, x_rows, eye, eye_x,
-        p0, jnp.zeros(words, U32), xal_bits0,
-        rsz0.astype(jnp.int32), jnp.zeros(words, U32))
-
-    st_P = jnp.zeros((D, words), U32).at[0].set(frame0[0])
-    st_B = jnp.zeros((D, words), U32).at[0].set(frame0[1])
-    st_Xp = jnp.zeros((D, words), U32).at[0].set(frame0[2])
-    st_Rb = jnp.zeros((D, words), U32).at[0].set(frame0[3])
-    st_rsz = jnp.zeros((D,), jnp.int32).at[0].set(frame0[4])
-    st_xal = jnp.zeros((D, xc_words), U32).at[0].set(frame0[5])
-    depth0 = jnp.where(push0, jnp.int32(0), jnp.int32(-1))
-
-    def cond(s):
-        return (s[0] >= 0) & (s[1] < cfg.max_iters)
-
-    def body(s):
-        """Straight-line masked DFS step — no lax.cond.
-
-        Under vmap a cond lowers to SELECT over both branch results, which
-        copies every stack buffer per iteration (measured: >40% of the
-        engine's HBM bytes). Instead, branch work always executes with its
-        carry side-effects gated by `has_branch`, and stack writes land in
-        frames that are DEAD on the pop path (slots > new depth), so they
-        need no gating at all. (§Perf iteration 2, EXPERIMENTS.md.)"""
-        depth, it, stP, stB, stXp, stRb, strsz, stxal, carry = s
-        P = stP[depth]
-        B = stB[depth]
-        Xp = stXp[depth]
-        Rb = stRb[depth]
-        rsz = strsz[depth]
-        xal = stxal[depth]
-
-        if cfg.backend in ("pivot", "revised"):
-            has_branch = _any_bit(B)
-            w = _first_bit_index(B)
-        else:
-            # rcd: clique test decides report-and-pop vs min-degree branch
-            degP = bitref.and_popcount_rows(a, P)
-            in_p = _bitset_to_mask(P, U)
-            psize = _popcount(P)
-            is_clique = jnp.all(~in_p | (degP == psize - 1))
-            has_branch = ~is_clique
-            w = jnp.argmin(jnp.where(in_p, degP, jnp.int32(1 << 30)))
-            w = w.astype(jnp.int32)
-
-        # ---- pop path: rcd maximality check + report (gated) ----
-        if cfg.backend == "rcd":
-            # report R ∪ P if no X vertex dominates P (paper Alg 3):
-            # x blocks iff P ⊆ N(x) ⟺ popcount(P & ~N(x)) == 0
-            x0_sub = _popcount(P[None, :] & jnp.bitwise_not(x_rows))
-            x0_block = jnp.any(_bitset_to_mask(xal, XC) & (x0_sub == 0))
-            xp_mask = _bitset_to_mask(Xp, U)
-            xp_sub = _popcount(P[None, :] & jnp.bitwise_not(a))
-            xp_block = jnp.any(xp_mask & (xp_sub == 0))
-            size = rsz + _popcount(P)
-            ok = (~x0_block & ~xp_block & (size >= 2) & _any_bit(P)
-                  & ~has_branch)
-            carry = _report_single(carry, cfg, Rb | P, size, ok)
-
-        # ---- branch path: always computed, side-effects gated ----
-        wbit = eye[w]
-        childP = P & a[w]
-        childXp = Xp & a[w]
-        # X0 rows stay alive iff adjacent to w (bit w of their row)
-        row_word = jax.lax.dynamic_index_in_dim(
-            x_rows, w // WORD, axis=1, keepdims=False)
-        adj_w = ((row_word >> (w % WORD).astype(U32)) & U32(1)) != 0
-        childxal = xal & _mask_to_bitset(adj_w, xc_words, eye_x)
-        carry = dict(carry,
-                     branches=carry["branches"] + has_branch.astype(jnp.int32))
-        carry, push, frame = _enter(carry, cfg, a, x_rows, eye, eye_x,
-                                    childP, childXp, childxal,
-                                    rsz + 1, Rb | wbit, enable=has_branch)
-        # update current frame (dead slot on the pop path — no gating):
-        # P \ w, X ∪ w, B \ w
-        stP = stP.at[depth].set(jnp.where(has_branch, P & ~wbit, P))
-        stXp = stXp.at[depth].set(jnp.where(has_branch, Xp | wbit, Xp))
-        if cfg.backend in ("pivot", "revised"):
-            stB = stB.at[depth].set(jnp.where(has_branch, B & ~wbit, B))
-        # write child frame (slot depth+1 is dead unless pushed)
-        nd = depth + 1
-        stP = stP.at[nd].set(frame[0])
-        stB = stB.at[nd].set(frame[1])
-        stXp = stXp.at[nd].set(frame[2])
-        stRb = stRb.at[nd].set(frame[3])
-        strsz = strsz.at[nd].set(frame[4])
-        stxal = stxal.at[nd].set(frame[5])
-        new_depth = jnp.where(has_branch,
-                              jnp.where(push, nd, depth), depth - 1)
-        return new_depth, it + 1, stP, stB, stXp, stRb, strsz, stxal, carry
-
-    state = (depth0, jnp.int32(0), st_P, st_B, st_Xp, st_Rb, st_rsz, st_xal,
-             carry0)
-    state = jax.lax.while_loop(cond, body, state)
-    return state[-1]
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def run_bucket(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
-    """vmap the per-root DFS over a bucket. Returns dict of per-root stats."""
-    return jax.vmap(lambda aa, pp, xr, xa, rr: _run_root(aa, pp, xr, xa, rr,
-                                                         cfg))(
-        a, p0, x_rows, x_alive0, rsz0)
-
-
-# ===========================================================================
-# High-level API
-# ===========================================================================
-
-@dataclasses.dataclass
-class MCEResult:
-    cliques: int
-    calls: int
-    branches: int
-    sum_px: int
-    pre_reported: int
-    enumerated: Optional[List[frozenset]] = None
-    overflow: bool = False
-
-
-def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
-        x_red: bool = True, backend: str = "pivot",
-        enumerate_cliques: bool = False, out_cap: int = 4096,
-        bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
-        split_threshold: Optional[int] = None) -> MCEResult:
-    """End-to-end single-host MCE: prepare on host, run buckets on device."""
-    prep = prepare(g, global_red=global_red, x_red=x_red,
-                   bucket_sizes=bucket_sizes, split_threshold=split_threshold)
-    cfg = EngineConfig(dynamic_red=dynamic_red, backend=backend,
-                       out_cap=out_cap if enumerate_cliques else 0)
-    total = MCEResult(cliques=len(prep.pre_reported), calls=0, branches=0,
-                      sum_px=0, pre_reported=len(prep.pre_reported),
-                      enumerated=list(prep.pre_reported) if enumerate_cliques else None)
-    for bucket in prep.buckets:
-        out = run_bucket(jnp.asarray(bucket.a), jnp.asarray(bucket.p0),
-                         jnp.asarray(bucket.x_rows),
-                         jnp.asarray(bucket.x_alive0),
-                         jnp.asarray(bucket.rsz0), cfg)
-        out = jax.tree.map(np.asarray, out)
-        total.cliques += int(out["cliques"].sum())
-        total.calls += int(out["calls"].sum())
-        total.branches += int(out["branches"].sum())
-        total.sum_px += int(out["sum_px"].sum())
-        if enumerate_cliques:
-            total.overflow |= bool(out["overflow"].any())
-            for r in range(bucket.num_roots):
-                uni = bucket.universes[r]
-                base = [int(b) for b in bucket.bases[r]]
-                for k in range(int(out["out_n"][r])):
-                    bits = out["out_rows"][r, k]
-                    members = _unpack_bits_np(bits)
-                    clique = frozenset(base + [int(uni[m]) for m in members])
-                    total.enumerated.append(clique)
-    return total
-
-
-def _unpack_bits_np(bits: np.ndarray) -> np.ndarray:
-    out = []
-    for wi, word in enumerate(bits):
-        word = int(word)
-        while word:
-            low = word & -word
-            out.append(wi * WORD + low.bit_length() - 1)
-            word ^= low
-    return np.array(out, dtype=np.int64)
+from repro.core.engine.frames import (EngineConfig, Frame,  # noqa: F401
+                                      FrameStack)
+from repro.core.engine.loop import (MCEResult, enter_call, run,  # noqa: F401
+                                    run_bucket, run_root)
+from repro.core.engine.prepare import (PreparedMCE, RootBucket,  # noqa: F401
+                                       _unpack_bits_np, prepare)
+
+# Historical alias (pre-layering underscore name; same signature). The old
+# `_enter` is NOT aliased: its signature changed (RootContext replaces the
+# A/x_rows/eye/eye_x positionals) — use engine.loop.enter_call.
+_run_root = run_root

@@ -32,9 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.bitset_engine import (EngineConfig, MCEResult, PreparedMCE,
-                                      RootBucket, _run_root, prepare)
+from repro.core.engine import (EngineConfig, MCEResult, PreparedMCE,
+                               RootBucket, prepare, run_root)
 from repro.graph.csr import CSRGraph
+from repro.sharding.compat import shard_map
 
 COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px")
 
@@ -99,16 +100,16 @@ def _sharded_counts(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh, axis):
     shard over the flattened ("pod", "data") product)."""
 
     def per_shard(a_s, p_s, xr_s, xa_s, rz_s):
-        out = jax.vmap(lambda aa, pp, rr, ll, zz: _run_root(aa, pp, rr, ll,
-                                                            zz, cfg))(
+        out = jax.vmap(lambda aa, pp, rr, ll, zz: run_root(aa, pp, rr, ll,
+                                                           zz, cfg))(
             a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0])
         sums = {k: jnp.sum(out[k]).astype(jnp.int32)[None] for k in COUNTER_KEYS}
         return sums
 
     specs_in = (P(axis), P(axis), P(axis), P(axis), P(axis))
     specs_out = {k: P(axis) for k in COUNTER_KEYS}
-    fn = jax.shard_map(per_shard, mesh=mesh, in_specs=specs_in,
-                       out_specs=specs_out, check_vma=False)
+    fn = shard_map(per_shard, mesh=mesh, in_specs=specs_in,
+                   out_specs=specs_out, check_vma=False)
     out = fn(a, p0, xr, xa, rz)
     return {k: jnp.sum(v) for k, v in out.items()}
 
@@ -146,8 +147,9 @@ class DistributedMCE:
                  bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
                  split_threshold: Optional[int] = None):
         if mesh is None:
-            mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            # no axis_types kwarg: Auto is the default and the kwarg does
+            # not exist on jax 0.4.x
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
             axis = "data"
         self.mesh = mesh
         self.axis = axis if isinstance(axis, (tuple, list)) else (axis,)

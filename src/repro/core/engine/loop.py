@@ -1,0 +1,203 @@
+"""The `lax.while_loop` DFS driver + single-host API (DESIGN.md §2.5).
+
+Composes the layers: `prepare` stages host-side buckets, `reductions`
+applies the per-call lemmas, `pivot` picks branch sets, and this module
+owns call entry, the explicit stack walk, the vmap over roots, and the
+end-to-end `run()`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import frames as fr
+from repro.core.engine import pivot as piv
+from repro.core.engine import reductions as red
+from repro.core.engine.frames import U32, WORD, EngineConfig, Frame, FrameStack
+from repro.core.engine.prepare import _unpack_bits_np, prepare
+from repro.graph.csr import CSRGraph
+
+
+# ===========================================================================
+# Call-entry: dynamic reduction + leaf report + branch-set construction
+# ===========================================================================
+
+def enter_call(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
+               enable=None):
+    """BK call entry for (R, P, X). Returns (carry, push?, Frame).
+
+    `enable` gates every carry side-effect (counter bumps, clique reports):
+    the DFS body runs enter_call unconditionally (straight-line, no
+    lax.cond — see run_root) and masks it out on pop-only iterations."""
+    XC = ctx.xc
+    enable = jnp.bool_(True) if enable is None else enable
+    en_i = enable.astype(jnp.int32)
+    carry = dict(carry, calls=carry["calls"] + en_i)
+    carry["sum_px"] = (carry["sum_px"] + (fr.popcount(P) + fr.popcount(Xp)
+                       + fr.popcount(xal)) * en_i)
+
+    # ---- dynamic reduction (paper Lemmas 5, 7, 8) ----
+    if cfg.dynamic_red:
+        carry, rf = red.dynamic_reduce(carry, cfg, ctx, P, Xp, xal, rsz, Rb,
+                                       enable)
+        P, Xp, xal, Rb, rsz = rf.P, rf.Xp, rf.xal, rf.Rb, rf.rsz
+    else:
+        rf = None
+
+    # ---- leaf report ----
+    p_empty = ~fr.any_bit(P)
+    x_empty = ~fr.any_bit(xal) & ~fr.any_bit(Xp)
+    carry = fr.report_single(carry, cfg, Rb, rsz,
+                             p_empty & x_empty & (rsz >= 2) & enable)
+    push = ~p_empty & enable
+
+    # ---- branch set (pivot backends; rcd recomputes per visit) ----
+    if cfg.backend in ("pivot", "revised"):
+        B = piv.branch_set(cfg, ctx, P, Xp, xal, rf)
+    else:
+        B = jnp.zeros_like(P)
+    return carry, push, Frame(P=P, B=B, Xp=Xp, Rb=Rb, rsz=rsz, xal=xal)
+
+
+# ===========================================================================
+# Per-root DFS driver
+# ===========================================================================
+
+def run_root(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
+    """Run the full BK subtree of one root. Returns the final carry dict."""
+    U, words = a.shape
+    ctx = fr.make_context(a, x_rows)
+    D = U + 2
+    xal_bits0 = fr.mask_to_bitset(x_alive0, ctx.eye_x)
+
+    carry0 = fr.carry_init(cfg, words)
+    # root frame: R = {v} (rsz=1), Rb covers universe additions only
+    carry0, push0, frame0 = enter_call(
+        carry0, cfg, ctx, p0, jnp.zeros(words, U32), xal_bits0,
+        rsz0.astype(jnp.int32), jnp.zeros(words, U32))
+
+    stack0 = FrameStack.alloc(D, words, ctx.xc_words).push(0, frame0)
+    depth0 = jnp.where(push0, jnp.int32(0), jnp.int32(-1))
+
+    def cond(s):
+        return (s[0] >= 0) & (s[1] < cfg.max_iters)
+
+    def body(s):
+        """Straight-line masked DFS step — no lax.cond.
+
+        Under vmap a cond lowers to SELECT over both branch results, which
+        copies every stack buffer per iteration (measured: >40% of the
+        engine's HBM bytes). Instead, branch work always executes with its
+        carry side-effects gated by `has_branch`, and stack writes land in
+        frames that are DEAD on the pop path (slots > new depth), so they
+        need no gating at all. (§Perf iteration 2, EXPERIMENTS.md.)"""
+        depth, it, stack, carry = s
+        f = stack.read(depth)
+
+        if cfg.backend in ("pivot", "revised"):
+            has_branch = fr.any_bit(f.B)
+            w = fr.first_bit_index(f.B)
+        else:
+            # rcd: clique test decides report-and-pop vs min-degree branch
+            has_branch, w = piv.rcd_select(ctx, f.P)
+
+        # ---- pop path: rcd maximality check + report (gated) ----
+        if cfg.backend == "rcd":
+            carry = piv.rcd_maximality_report(carry, cfg, ctx, f.P, f.Xp,
+                                              f.xal, f.Rb, f.rsz, has_branch)
+
+        # ---- branch path: always computed, side-effects gated ----
+        wbit = ctx.eye[w]
+        childP = f.P & a[w]
+        childXp = f.Xp & a[w]
+        # X0 rows stay alive iff adjacent to w (bit w of their row)
+        row_word = jax.lax.dynamic_index_in_dim(
+            x_rows, w // WORD, axis=1, keepdims=False)
+        adj_w = ((row_word >> (w % WORD).astype(U32)) & U32(1)) != 0
+        childxal = f.xal & fr.mask_to_bitset(adj_w, ctx.eye_x)
+        carry = dict(carry,
+                     branches=carry["branches"] + has_branch.astype(jnp.int32))
+        carry, push, child = enter_call(carry, cfg, ctx, childP, childXp,
+                                        childxal, f.rsz + 1, f.Rb | wbit,
+                                        enable=has_branch)
+        # update current frame (dead slot on the pop path — no gating):
+        # P \ w, X ∪ w, B \ w
+        cur = dict(P=jnp.where(has_branch, f.P & ~wbit, f.P),
+                   Xp=jnp.where(has_branch, f.Xp | wbit, f.Xp))
+        if cfg.backend in ("pivot", "revised"):
+            cur["B"] = jnp.where(has_branch, f.B & ~wbit, f.B)
+        stack = stack.write(depth, **cur)
+        # write child frame (slot depth+1 is dead unless pushed)
+        nd = depth + 1
+        stack = stack.push(nd, child)
+        new_depth = jnp.where(has_branch,
+                              jnp.where(push, nd, depth), depth - 1)
+        return new_depth, it + 1, stack, carry
+
+    state = (depth0, jnp.int32(0), stack0, carry0)
+    state = jax.lax.while_loop(cond, body, state)
+    return state[-1]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run_bucket(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
+    """vmap the per-root DFS over a bucket. Returns dict of per-root stats."""
+    return jax.vmap(lambda aa, pp, xr, xa, rr: run_root(aa, pp, xr, xa, rr,
+                                                        cfg))(
+        a, p0, x_rows, x_alive0, rsz0)
+
+
+# ===========================================================================
+# High-level API
+# ===========================================================================
+
+@dataclasses.dataclass
+class MCEResult:
+    cliques: int
+    calls: int
+    branches: int
+    sum_px: int
+    pre_reported: int
+    enumerated: Optional[List[frozenset]] = None
+    overflow: bool = False
+
+
+def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
+        x_red: bool = True, backend: str = "pivot",
+        enumerate_cliques: bool = False, out_cap: int = 4096,
+        bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
+        split_threshold: Optional[int] = None) -> MCEResult:
+    """End-to-end single-host MCE: prepare on host, run buckets on device."""
+    prep = prepare(g, global_red=global_red, x_red=x_red,
+                   bucket_sizes=bucket_sizes, split_threshold=split_threshold)
+    cfg = EngineConfig(dynamic_red=dynamic_red, backend=backend,
+                       out_cap=out_cap if enumerate_cliques else 0)
+    total = MCEResult(cliques=len(prep.pre_reported), calls=0, branches=0,
+                      sum_px=0, pre_reported=len(prep.pre_reported),
+                      enumerated=list(prep.pre_reported) if enumerate_cliques else None)
+    for bucket in prep.buckets:
+        out = run_bucket(jnp.asarray(bucket.a), jnp.asarray(bucket.p0),
+                         jnp.asarray(bucket.x_rows),
+                         jnp.asarray(bucket.x_alive0),
+                         jnp.asarray(bucket.rsz0), cfg)
+        out = jax.tree.map(np.asarray, out)
+        total.cliques += int(out["cliques"].sum())
+        total.calls += int(out["calls"].sum())
+        total.branches += int(out["branches"].sum())
+        total.sum_px += int(out["sum_px"].sum())
+        if enumerate_cliques:
+            total.overflow |= bool(out["overflow"].any())
+            for r in range(bucket.num_roots):
+                uni = bucket.universes[r]
+                base = [int(b) for b in bucket.bases[r]]
+                for k in range(int(out["out_n"][r])):
+                    bits = out["out_rows"][r, k]
+                    members = _unpack_bits_np(bits)
+                    clique = frozenset(base + [int(uni[m]) for m in members])
+                    total.enumerated.append(clique)
+    return total

@@ -1,0 +1,80 @@
+"""Pivot/branch-selection strategies behind one interface (DESIGN.md §2.4).
+
+Backends:
+  'pivot'   — Tomita max-|N(u) ∩ P| pivot over P ∪ X (universe + X0 rows)
+  'revised' — same but the pool is restricted to P (paper's revised BK)
+  'rcd'     — top-down clique test + min-degree branching, selected per
+              visit (no branch set is precomputed at call entry)
+
+Every score sweep is a fused AND+popcount(+argmax) dispatch through
+`bitset_ops.ops`; nothing here touches `ref`/`kernel` directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine import frames as fr
+from repro.kernels.bitset_ops import ops as bitops
+
+
+def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red):
+    """Branch set B = P \\ N(pivot) for the 'pivot'/'revised' backends.
+
+    `red` is the ReducedFrame from dynamic_reduce (None when dynamic
+    reduction is off); with cfg.reuse_degrees its degP2/n_full replace the
+    third AND+popcount sweep over A (§Perf)."""
+    U = ctx.u
+    XC = ctx.xc
+    in_p = fr.bitset_to_mask(P, U)
+    if cfg.backend == "revised":
+        pool = in_p
+    else:
+        pool = in_p | fr.bitset_to_mask(Xp, U)
+
+    if red is not None and cfg.reuse_degrees:
+        # §Perf: every `full` vertex was adjacent to ALL of P', so deg over
+        # the final P is exactly degP2 − n_full for surviving P members —
+        # reuse instead of a third AND+popcount sweep of A.
+        uni_scores = jnp.where(pool, red.degP2 - red.n_full, -1)
+        best_u = jnp.argmax(uni_scores)
+        su = uni_scores[best_u]
+    else:
+        best_u, su = bitops.and_popcount_argmax(ctx.A, P, pool)
+    best_x, sx = bitops.and_popcount_argmax(ctx.x_rows, P,
+                                            fr.bitset_to_mask(xal, XC))
+    use_x = sx > su
+    pivot_row = jnp.where(use_x, ctx.x_rows[best_x], ctx.A[best_u])
+    return P & ~pivot_row
+
+
+def rcd_select(ctx: fr.RootContext, P):
+    """'rcd' per-visit branching: (has_branch, w).
+
+    P is a clique iff every member has degree |P|−1 inside P; otherwise
+    branch on the minimum-degree member."""
+    degP = bitops.and_popcount_rows(ctx.A, P)
+    in_p = fr.bitset_to_mask(P, ctx.u)
+    psize = fr.popcount(P)
+    is_clique = jnp.all(~in_p | (degP == psize - 1))
+    w = jnp.argmin(jnp.where(in_p, degP, jnp.int32(1 << 30)))
+    return ~is_clique, w.astype(jnp.int32)
+
+
+def rcd_maximality_report(carry, cfg, ctx: fr.RootContext, P, Xp, xal, Rb,
+                          rsz, has_branch):
+    """'rcd' pop-path report: R ∪ P if no forbidden vertex dominates P.
+
+    x blocks iff P ⊆ N(x) ⟺ popcount(P & ~N(x)) == 0 — one fused
+    batched-mask dispatch over the stacked X0 rows + universe-X adjacency
+    (paper Alg 3)."""
+    XC = ctx.xc
+    U = ctx.u
+    not_nbrs = jnp.concatenate([jnp.bitwise_not(ctx.x_rows),
+                                jnp.bitwise_not(ctx.A)], axis=0)
+    sub = bitops.and_popcount_many(P[None, :], not_nbrs)[:, 0]   # (XC + U,)
+    in_x = jnp.concatenate([fr.bitset_to_mask(xal, XC),
+                            fr.bitset_to_mask(Xp, U)])
+    blocked = jnp.any(in_x & (sub == 0))
+    size = rsz + fr.popcount(P)
+    ok = (~blocked & (size >= 2) & fr.any_bit(P) & ~has_branch)
+    return fr.report_single(carry, cfg, Rb | P, size, ok)

@@ -1,14 +1,21 @@
-"""Pallas TPU kernel: fused AND + popcount over bitset rows.
+"""Pallas TPU kernels: fused AND + popcount set algebra over bitset rows.
 
-Computes out[k] = popcount(rows[k] & mask) for a (K, W) uint32 row matrix and
-a (W,) mask, tiled so each grid step keeps a (BK, W) row tile + the mask in
+Three fused primitives back the MCE engine's inner loop (see DESIGN.md §3):
+
+* `and_popcount_rows`  — out[k] = popcount(rows[k] & mask); the deg_P sweep.
+* `and_popcount_argmax` — the pivot-select: AND + popcount + running argmax
+  in one VMEM pass, so pivot scoring never materialises the (K,) score
+  vector in HBM.
+* `and_popcount_many`  — one row matrix against an (M, W) batch of masks;
+  the X-subset maximality test shape.
+
+All are tiled so each grid step keeps a (BK, W) row tile + the mask(s) in
 VMEM. On TPU the AND+popcount pipeline runs on the VPU (8×128 lanes); W is
 padded to the 128-lane boundary by the caller so loads are aligned.
 
-This is the engine's inner-loop op (`deg_P(u)` for all u, pivot scoring,
-X-subset tests). The kernel exists because the op is executed once per BK
-tree node over the whole row matrix — the paper's measurement that set
-intersections are 73.6% of MCE time maps exactly onto this kernel.
+These kernels exist because the ops execute once per BK tree node over the
+whole row matrix — the paper's measurement that set intersections are 73.6%
+of MCE time maps exactly onto this module.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ from jax.experimental import pallas as pl
 
 
 DEFAULT_BLOCK_K = 256
+DEFAULT_BLOCK_M = 256
 
 
 def _and_popcount_kernel(rows_ref, mask_ref, out_ref):
@@ -55,3 +63,115 @@ def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray,
         interpret=interpret,
     )(rows, mask[None, :])
     return out[:k, 0]
+
+
+def _and_popcount_argmax_kernel(rows_ref, mask_ref, valid_ref,
+                                best_ref, idx_ref, *, block_k: int):
+    i = pl.program_id(0)
+    rows = rows_ref[...]                      # (BK, W) uint32
+    mask = mask_ref[...]                      # (1, W) uint32
+    valid = valid_ref[...]                    # (BK, 1) int32 (0/1)
+    counts = jnp.sum(
+        jax.lax.population_count(jnp.bitwise_and(rows, mask)).astype(jnp.int32),
+        axis=1, keepdims=True)                # (BK, 1)
+    scores = jnp.where(valid != 0, counts, jnp.int32(-1))
+    tile_best = jnp.max(scores)
+    # first-max within the tile, matching jnp.argmax tie-breaking
+    hit = scores[:, 0] == tile_best
+    pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)[:, 0]
+    tile_arg = jnp.min(jnp.where(hit, pos, jnp.int32(block_k))) + i * block_k
+
+    # grid steps are sequential on TPU: accumulate a running (best, argmax)
+    # in the revisited (1, 1) output block; strict `>` keeps the first max.
+    @pl.when(i == 0)
+    def _init():
+        best_ref[0, 0] = tile_best
+        idx_ref[0, 0] = tile_arg
+
+    @pl.when((i > 0) & (tile_best > best_ref[0, 0]))
+    def _update():
+        best_ref[0, 0] = tile_best
+        idx_ref[0, 0] = tile_arg
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
+                        valid: jnp.ndarray,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = True):
+    """Fused pivot-select. rows: (K, W) uint32, mask: (W,) uint32,
+    valid: (K,) bool -> (idx int32, best int32) with invalid rows scoring -1.
+    """
+    k, w = rows.shape
+    bk = min(block_k, k)
+    k_pad = -(-k // bk) * bk
+    valid_i = valid.astype(jnp.int32)
+    if k_pad != k:
+        rows = jnp.pad(rows, ((0, k_pad - k), (0, 0)))
+        valid_i = jnp.pad(valid_i, (0, k_pad - k))   # pad rows are invalid
+    grid = (k_pad // bk,)
+    best, idx = pl.pallas_call(
+        functools.partial(_and_popcount_argmax_kernel, block_k=bk),
+        out_shape=(jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((bk, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        interpret=interpret,
+    )(rows, mask[None, :], valid_i[:, None])
+    return idx[0, 0], best[0, 0]
+
+
+def _and_popcount_many_kernel(rows_ref, masks_ref, out_ref):
+    rows = rows_ref[...]                      # (BK, W) uint32
+    masks = masks_ref[...]                    # (BM, W) uint32
+    anded = jnp.bitwise_and(rows[None, :, :], masks[:, None, :])
+    out_ref[...] = jnp.sum(
+        jax.lax.population_count(anded).astype(jnp.int32), axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k",
+                                             "interpret"))
+def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray,
+                      block_m: int = DEFAULT_BLOCK_M,
+                      block_k: int = DEFAULT_BLOCK_K,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Batched-mask path. rows: (K, W), masks: (M, W) -> (M, K) int32
+    with out[m, k] = popcount(rows[k] & masks[m])."""
+    k, w = rows.shape
+    m, wm = masks.shape
+    assert w == wm, f"word-width mismatch {w} vs {wm}"
+    bk = min(block_k, k)
+    bm = min(block_m, m)
+    # VMEM budget: the kernel body materialises (BM, BK, W) uint32 + int32
+    # intermediates (8 B/elem); cap the tile at ~4 MiB so wide-W buckets
+    # (e.g. W=32 at 256×256 blocks) don't blow VMEM on the compiled path.
+    max_elems = 1 << 19
+    while bm * bk * w > max_elems and bk > 8:
+        bk = -(-bk // 2)
+    while bm * bk * w > max_elems and bm > 8:
+        bm = -(-bm // 2)
+    k_pad = -(-k // bk) * bk
+    m_pad = -(-m // bm) * bm
+    if k_pad != k:
+        rows = jnp.pad(rows, ((0, k_pad - k), (0, 0)))
+    if m_pad != m:
+        masks = jnp.pad(masks, ((0, m_pad - m), (0, 0)))
+    grid = (m_pad // bm, k_pad // bk)
+    out = pl.pallas_call(
+        _and_popcount_many_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_pad, k_pad), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(rows, masks)
+    return out[:m, :k]

@@ -1,10 +1,20 @@
-"""Dispatching wrapper for bitset ops.
+"""Dispatching wrapper for bitset set algebra — the engine's ONLY entry point.
 
-On TPU the Pallas kernel is used; on CPU (this container) the pure-jnp ref is
-both the oracle and the execution path (the Pallas kernel is validated in
-interpret mode by tests). The engine's semantics never depend on the path.
+Layering contract (DESIGN.md §3): every module outside `kernels/bitset_ops`
+that needs bitset algebra (AND+popcount sweeps, fused pivot-select, batched
+X-subset tests) calls this module. Nothing outside this package may import
+`ref` or `kernel` directly (enforced by tests/test_engine_layering.py), so
+there is exactly one choke point to measure, swap, and accelerate.
+
+On TPU the Pallas kernels are used for the 2-D shapes the engine's hot loop
+emits; on CPU (this container) the pure-jnp ref is both the oracle and the
+execution path (the Pallas kernels are validated in interpret mode by
+tests). Leading batch dims always fall back to the ref path. The engine's
+semantics never depend on the path taken.
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +26,11 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def popcount_words(bits: jnp.ndarray) -> jnp.ndarray:
+    """Total set-bit count over the trailing word axis: (..., W) -> (...)."""
+    return jnp.sum(jax.lax.population_count(bits), axis=-1).astype(jnp.int32)
+
+
 def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """popcount(rows & mask) per row; dispatches pallas on TPU, jnp elsewhere.
 
@@ -25,3 +40,26 @@ def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     if _on_tpu() and rows.ndim == 2:
         return kernel.and_popcount_rows(rows, mask, interpret=False)
     return ref.and_popcount_rows(rows, mask)
+
+
+def and_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """rows & mask broadcast over the row axis (materialised intersection)."""
+    return ref.and_rows(rows, mask)
+
+
+def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
+                        valid: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused pivot-select: (first-argmax, max) of popcount(rows & mask) over
+    `valid` rows; invalid rows score -1. One VMEM pass on TPU."""
+    if _on_tpu() and rows.ndim == 2 and valid is not None:
+        return kernel.and_popcount_argmax(rows, mask, valid, interpret=False)
+    return ref.and_popcount_argmax(rows, mask, valid)
+
+
+def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """out[m, k] = popcount(rows[k] & masks[m]) — one row matrix against an
+    (M, W) batch of masks (the X-subset maximality-test shape)."""
+    if _on_tpu() and rows.ndim == 2 and masks.ndim == 2:
+        return kernel.and_popcount_many(rows, masks, interpret=False)
+    return ref.and_popcount_many(rows, masks)

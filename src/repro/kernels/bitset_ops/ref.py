@@ -1,6 +1,8 @@
 """Pure-jnp oracle for the bitset AND+popcount kernels."""
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -19,3 +21,33 @@ def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 def and_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """rows & mask broadcast over the row axis (materialised intersection)."""
     return jnp.bitwise_and(rows, mask[..., None, :])
+
+
+def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
+                        valid: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused pivot-select: argmax over popcount(rows & mask) scores.
+
+    rows: (..., K, W) uint32, mask: (..., W) uint32, valid: (..., K) bool.
+    Returns (idx, best): int32 index of the first best-scoring valid row and
+    its score; invalid rows score -1 (so all-invalid -> best == -1, idx == 0).
+    Matches jnp.argmax tie-breaking (first occurrence wins).
+    """
+    scores = and_popcount_rows(rows, mask)
+    if valid is not None:
+        scores = jnp.where(valid, scores, jnp.int32(-1))
+    idx = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    best = jnp.take_along_axis(scores, idx[..., None], axis=-1)[..., 0]
+    return idx, best
+
+
+def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """One row matrix against a batch of masks.
+
+    rows: (..., K, W) uint32, masks: (..., M, W) uint32 -> (..., M, K) int32
+    with out[m, k] = popcount(rows[k] & masks[m]). This is the X-subset
+    maximality test shape: `P ⊆ N(x)` for every forbidden row x is
+    `and_popcount_many(P[None, :], ~x_rows)[:, 0] == 0`.
+    """
+    anded = jnp.bitwise_and(rows[..., None, :, :], masks[..., :, None, :])
+    return jnp.sum(jax.lax.population_count(anded), axis=-1).astype(jnp.int32)

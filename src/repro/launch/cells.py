@@ -195,7 +195,7 @@ def _recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellProgram:
 # ===========================================================================
 
 def _mce_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellProgram:
-    from repro.core.bitset_engine import EngineConfig
+    from repro.core.engine import EngineConfig
     from repro.core.driver import _sharded_counts
 
     cfg_arch = spec.build()

@@ -146,7 +146,7 @@ def _measure(prog, mesh, save_hlo: Optional[str] = None) -> Dict[str, float]:
     (repro.launch.hlo_cost) — ``cost_analysis()`` counts while bodies once
     (verified, see EXPERIMENTS.md §Methodology) and is kept as a secondary
     record (flops_ca / bytes_ca)."""
-    from repro.launch.hlo_cost import analyze
+    from repro.launch.hlo_cost import analyze, xla_cost_analysis
 
     t0 = time.time()
     with mesh:
@@ -154,7 +154,7 @@ def _measure(prog, mesh, save_hlo: Optional[str] = None) -> Dict[str, float]:
         lowered = jitted.lower(*prog.args)
         compiled = lowered.compile()
     out = dict(compile_s=time.time() - t0)
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost_analysis(compiled)
     out["flops_ca"] = float(cost.get("flops", 0.0))
     out["bytes_ca"] = float(cost.get("bytes accessed", 0.0))
     try:

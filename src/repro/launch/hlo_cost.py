@@ -61,6 +61,15 @@ COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalise ``compiled.cost_analysis()`` across jax versions: newer jax
+    returns a dict, 0.4.x returns a list with one dict per program."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
     elems_total, bytes_total = 0, 0
     for dt, dims in _SHAPE_RE.findall(shape_str):

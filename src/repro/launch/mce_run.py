@@ -10,9 +10,17 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core.bitset_engine import EngineConfig
+from repro.core.engine import EngineConfig
 from repro.core.driver import DistributedMCE
 from repro.graph import generators as gen
+
+
+def _num(v: str):
+    """int where possible, float fallback — '1e-3' and '2.5' both parse."""
+    try:
+        return int(v)
+    except ValueError:
+        return float(v)
 
 
 def parse_graph(desc: str):
@@ -22,7 +30,7 @@ def parse_graph(desc: str):
     if rest:
         for kv in rest.split(","):
             k, _, v = kv.partition("=")
-            kw[k] = float(v) if "." in v else int(v)
+            kw[k] = _num(v)
     if fam == "er":
         return gen.erdos_renyi(int(kw.get("n", 500)), kw.get("p", 0.1),
                                seed=int(kw.get("seed", 0)))

@@ -13,6 +13,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from typing import Any, Dict, Optional
 
@@ -119,20 +120,37 @@ def train(arch: str, steps: int = 50, smoke: bool = True,
 
     losses = []
     t0 = time.time()
-    for step in range(start, steps):
-        if fail_at_step is not None and step == fail_at_step:
-            raise RuntimeError(f"simulated node failure at step {step}")
-        batch = make_batch(step)
-        params, opt, loss = jit_step(params, opt, batch)
-        if step % log_every == 0 or step == steps - 1:
-            lv = float(loss)
-            losses.append((step, lv))
-            print(f"step {step:5d} loss {lv:.4f} "
-                  f"({(time.time()-t0):.1f}s)", flush=True)
-        if mgr and (step + 1) % ckpt_every == 0:
-            mgr.save_async(step + 1, (params, opt), meta=dict(arch=arch))
+    loop_ok = False
+    try:
+        for step in range(start, steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"simulated node failure at step {step}")
+            batch = make_batch(step)
+            params, opt, loss = jit_step(params, opt, batch)
+            if step % log_every == 0 or step == steps - 1:
+                lv = float(loss)
+                losses.append((step, lv))
+                print(f"step {step:5d} loss {lv:.4f} "
+                      f"({(time.time()-t0):.1f}s)", flush=True)
+            if mgr and (step + 1) % ckpt_every == 0:
+                mgr.save_async(step + 1, (params, opt), meta=dict(arch=arch))
+        loop_ok = True
+    finally:
+        # flush the async writer even on the failure path — an in-flight
+        # snapshot must commit (or surface its error) before we propagate,
+        # otherwise resume races the worker thread for latest_step()
+        if mgr:
+            try:
+                mgr.wait()
+            except Exception as flush_err:
+                if loop_ok:
+                    raise
+                # a training exception is already propagating — the flush
+                # error must not mask it, but leave a diagnostic trail
+                print(f"WARNING: checkpoint flush failed during error "
+                      f"propagation: {flush_err!r}", file=sys.stderr,
+                      flush=True)
     if mgr:
-        mgr.wait()
         mgr.save(steps, (params, opt), meta=dict(arch=arch))
     return dict(final_loss=float(loss), losses=losses,
                 restored_from=restored_from, params=params)

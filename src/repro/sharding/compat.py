@@ -1,0 +1,21 @@
+"""`shard_map` across jax versions.
+
+Newer jax exposes `jax.shard_map(..., check_vma=...)`; older releases (like
+this container's 0.4.x) only have `jax.experimental.shard_map.shard_map`
+with the `check_rep` spelling of the same flag. Call sites import from here
+so the rest of the codebase is version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

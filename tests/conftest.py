@@ -5,8 +5,13 @@ import sys
 # for the dry-run (tests that need virtual devices spawn subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
-from hypothesis import settings
+# hypothesis is optional: property tests skip when it is absent (see _hyp.py)
+from _hyp import HAVE_HYPOTHESIS  # noqa: E402
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+if HAVE_HYPOTHESIS:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

@@ -1,0 +1,170 @@
+"""bitset_ops layer: fused-kernel parity edge cases + dispatcher routing.
+
+Covers the shapes the Pallas path must survive — K not a multiple of
+block_k, W at/over the 128-lane pad boundary — plus the dispatch contract:
+2-D on TPU goes to the kernel, leading batch dims always fall back to ref.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitset_ops import kernel as bk
+from repro.kernels.bitset_ops import ops, ref
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).integers(0, 2**32, shape,
+                                                dtype=np.uint32)
+
+
+# --------------------------------------------------------------------------
+# and_popcount_argmax: fused AND + popcount + argmax
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,w,block_k", [
+    (1, 1, 256), (7, 4, 4), (100, 8, 32), (515, 4, 256),  # K % block_k != 0
+    (64, 128, 64),                                        # W at lane boundary
+    (33, 160, 16),                                        # W over the boundary
+])
+def test_and_popcount_argmax_parity(k, w, block_k):
+    rng = np.random.default_rng(k * 100 + w)
+    rows = jnp.asarray(_rand((k, w), k + w))
+    mask = jnp.asarray(_rand((w,), k * w + 1))
+    valid = jnp.asarray(rng.random(k) < 0.7)
+    gi, gb = bk.and_popcount_argmax(rows, mask, valid, block_k=block_k,
+                                    interpret=True)
+    wi, wb = ref.and_popcount_argmax(rows, mask, valid)
+    assert int(gb) == int(wb)
+    assert int(gi) == int(wi)
+
+
+def test_and_popcount_argmax_all_invalid():
+    rows = jnp.asarray(_rand((13, 2), 5))
+    mask = jnp.asarray(_rand((2,), 6))
+    valid = jnp.zeros(13, bool)
+    gi, gb = bk.and_popcount_argmax(rows, mask, valid, block_k=4,
+                                    interpret=True)
+    assert int(gb) == -1          # all-invalid sentinel score
+
+
+def test_and_popcount_argmax_tie_breaks_first():
+    # identical rows -> identical scores; first valid index must win, same
+    # as jnp.argmax in the ref (the engine's pivot choice depends on this)
+    rows = jnp.asarray(np.tile(_rand((1, 4), 7), (20, 1)))
+    mask = jnp.asarray(_rand((4,), 8))
+    valid = jnp.ones(20, bool)
+    gi, _ = bk.and_popcount_argmax(rows, mask, valid, block_k=8,
+                                   interpret=True)
+    wi, _ = ref.and_popcount_argmax(rows, mask, valid)
+    assert int(gi) == int(wi) == 0
+
+
+# --------------------------------------------------------------------------
+# and_popcount_many: one row matrix vs a batch of masks
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,m,w", [
+    (1, 1, 1), (7, 5, 4), (100, 33, 8),
+    (300, 17, 4),                 # K % block_k != 0 (block_k=256)
+    (5, 300, 4),                  # M % block_m != 0
+    (9, 9, 128), (3, 4, 136),     # W at / over the 128-lane boundary
+    (600, 300, 32),               # trips the VMEM tile clamp (bm*bk*w cap)
+])
+def test_and_popcount_many_parity(k, m, w):
+    rows = jnp.asarray(_rand((k, w), k * m))
+    masks = jnp.asarray(_rand((m, w), k + m + w))
+    got = bk.and_popcount_many(rows, masks, interpret=True)
+    want = ref.and_popcount_many(rows, masks)
+    assert got.shape == (m, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_and_popcount_many_python_int_crosscheck():
+    rows = _rand((6, 3), 1)
+    masks = _rand((4, 3), 2)
+    want = ref.and_popcount_many(jnp.asarray(rows), jnp.asarray(masks))
+    for mi in range(4):
+        m_int = int.from_bytes(masks[mi].tobytes(), "little")
+        for ki in range(6):
+            r_int = int.from_bytes(rows[ki].tobytes(), "little")
+            assert int(want[mi, ki]) == bin(r_int & m_int).count("1")
+
+
+# --------------------------------------------------------------------------
+# and_popcount_rows: existing kernel, new edge shapes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,w,block_k", [
+    (515, 128, 256),              # K % block_k != 0, W at lane boundary
+    (40, 136, 16),                # W over the lane boundary
+    (1, 256, 256),
+])
+def test_and_popcount_rows_pad_boundaries(k, w, block_k):
+    rows = jnp.asarray(_rand((k, w), k))
+    mask = jnp.asarray(_rand((w,), w))
+    got = bk.and_popcount_rows(rows, mask, block_k=block_k, interpret=True)
+    want = ref.and_popcount_rows(rows, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# dispatcher routing: TPU 2-D -> kernel, batch dims -> ref fallback
+# --------------------------------------------------------------------------
+
+def test_dispatch_batch_dims_fall_back_to_ref(monkeypatch):
+    """Even when the backend claims TPU, >2-D input must take the ref path
+    (the pallas kernels are 2-D only)."""
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    sentinel = RuntimeError("pallas kernel must not be called for 3-D")
+
+    def boom(*a, **k):
+        raise sentinel
+
+    monkeypatch.setattr(ops.kernel, "and_popcount_rows", boom)
+    monkeypatch.setattr(ops.kernel, "and_popcount_many", boom)
+    rows3 = jnp.asarray(_rand((2, 9, 4), 3))
+    mask2 = jnp.asarray(_rand((2, 4), 4))
+    want = ref.and_popcount_rows(rows3, mask2)
+    np.testing.assert_array_equal(
+        np.asarray(ops.and_popcount_rows(rows3, mask2)), np.asarray(want))
+    masks3 = jnp.asarray(_rand((2, 5, 4), 5))
+    np.testing.assert_array_equal(
+        np.asarray(ops.and_popcount_many(rows3, masks3)),
+        np.asarray(ref.and_popcount_many(rows3, masks3)))
+
+
+def test_dispatch_2d_routes_to_kernel_on_tpu(monkeypatch):
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    calls = []
+
+    def fake_rows(rows, mask, interpret):
+        calls.append(("rows", interpret))
+        return ref.and_popcount_rows(rows, mask)
+
+    def fake_argmax(rows, mask, valid, interpret):
+        calls.append(("argmax", interpret))
+        return ref.and_popcount_argmax(rows, mask, valid)
+
+    def fake_many(rows, masks, interpret):
+        calls.append(("many", interpret))
+        return ref.and_popcount_many(rows, masks)
+
+    monkeypatch.setattr(ops.kernel, "and_popcount_rows", fake_rows)
+    monkeypatch.setattr(ops.kernel, "and_popcount_argmax", fake_argmax)
+    monkeypatch.setattr(ops.kernel, "and_popcount_many", fake_many)
+    rows = jnp.asarray(_rand((6, 2), 1))
+    mask = jnp.asarray(_rand((2,), 2))
+    ops.and_popcount_rows(rows, mask)
+    ops.and_popcount_argmax(rows, mask, jnp.ones(6, bool))
+    ops.and_popcount_many(rows, jnp.asarray(_rand((3, 2), 3)))
+    assert calls == [("rows", False), ("argmax", False), ("many", False)]
+
+
+def test_dispatch_cpu_uses_ref():
+    """On this container (CPU) the dispatcher must take the jnp ref path."""
+    assert not ops._on_tpu()
+    rows = jnp.asarray(_rand((6, 2), 1))
+    mask = jnp.asarray(_rand((2,), 2))
+    np.testing.assert_array_equal(
+        np.asarray(ops.and_popcount_rows(rows, mask)),
+        np.asarray(ref.and_popcount_rows(rows, mask)))

@@ -1,0 +1,90 @@
+"""Architecture lint: the layered engine + single kernel-dispatch choke point.
+
+Guards the refactor's contracts (DESIGN.md §2–§3):
+  * no module outside `kernels/bitset_ops` imports `ref`/`kernel` directly —
+    all bitset set algebra dispatches through `ops` (the dead-kernel bug
+    this rule prevents: the engine importing the jnp ref and silently never
+    using the Pallas TPU path);
+  * `core/engine/` holds the layered modules;
+  * `core/bitset_engine.py` stays a thin re-export shim.
+"""
+import os
+import re
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+_FORBIDDEN = [
+    # from repro.kernels.bitset_ops import ref / kernel (any alias/combo)
+    re.compile(r"from\s+repro\.kernels\.bitset_ops\s+import\s+"
+               r"[^\n]*\b(ref|kernel)\b"),
+    re.compile(r"from\s+repro\.kernels\.bitset_ops\.(ref|kernel)\s+import"),
+    re.compile(r"import\s+repro\.kernels\.bitset_ops\.(ref|kernel)\b"),
+]
+
+
+def _py_files():
+    for dirpath, _dirnames, filenames in os.walk(SRC):
+        if os.path.join("kernels", "bitset_ops") in dirpath:
+            continue          # the package itself may wire ref/kernel to ops
+        for name in filenames:
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+def test_no_direct_ref_or_kernel_imports():
+    offenders = []
+    for path in _py_files():
+        with open(path) as f:
+            text = f.read()
+        for pat in _FORBIDDEN:
+            if pat.search(text):
+                offenders.append(os.path.relpath(path, SRC))
+                break
+    assert not offenders, (
+        f"modules importing bitset_ops ref/kernel directly (must go through "
+        f"bitset_ops.ops): {offenders}")
+
+
+def test_lint_catches_the_original_bug():
+    """The regex must flag the exact import the dead-kernel bug used."""
+    bad = "from repro.kernels.bitset_ops import ref as bitref\n"
+    assert any(p.search(bad) for p in _FORBIDDEN)
+    good = "from repro.kernels.bitset_ops import ops as bitops\n"
+    assert not any(p.search(good) for p in _FORBIDDEN)
+
+
+def test_engine_package_layout():
+    pkg = os.path.join(SRC, "core", "engine")
+    for mod in ("__init__.py", "prepare.py", "frames.py", "reductions.py",
+                "pivot.py", "loop.py"):
+        assert os.path.isfile(os.path.join(pkg, mod)), f"missing engine/{mod}"
+
+
+def test_bitset_engine_is_a_thin_shim():
+    path = os.path.join(SRC, "core", "bitset_engine.py")
+    with open(path) as f:
+        lines = f.readlines()
+    assert len(lines) <= 50, (
+        f"bitset_engine.py is {len(lines)} lines; it must stay a ≤50-line "
+        f"re-export shim — put real code in core/engine/")
+
+
+def test_shim_exports_match_engine_package():
+    import repro.core.bitset_engine as shim
+    import repro.core.engine as eng
+
+    for name in ("EngineConfig", "MCEResult", "PreparedMCE", "RootBucket",
+                 "prepare", "run", "run_bucket", "run_root"):
+        assert getattr(shim, name) is getattr(eng, name), name
+    # historical underscore aliases still resolve
+    assert shim._run_root is eng.run_root
+
+
+def test_ops_is_the_engine_entry_point():
+    """The hot-loop modules must reference the ops dispatcher."""
+    for mod in ("reductions.py", "pivot.py"):
+        with open(os.path.join(SRC, "core", "engine", mod)) as f:
+            text = f.read()
+        assert "from repro.kernels.bitset_ops import ops" in text, mod

@@ -1,7 +1,7 @@
 """Graph substrate: CSR invariants, orderings, generators, sampler."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, strategies as st  # optional-hypothesis shim
 
 from repro.graph import (CSRGraph, NeighborSampler, barabasi_albert, caveman,
                          complete_graph, core_numbers, degeneracy_order,

@@ -1,0 +1,28 @@
+"""Launcher arg parsing: graph descriptors, including scientific notation."""
+import pytest
+
+from repro.launch.mce_run import _num, parse_graph
+
+
+def test_num_int_float_and_scientific():
+    assert _num("300") == 300 and isinstance(_num("300"), int)
+    assert _num("0.25") == 0.25
+    assert _num("1e-3") == pytest.approx(1e-3)   # no '.' but still a float
+    assert _num("2E2") == pytest.approx(200.0)
+
+
+def test_parse_graph_scientific_notation_p():
+    g = parse_graph("er:n=300,p=1e-3,seed=1")    # crashed pre-fix: int('1e-3')
+    assert g.n == 300
+
+
+def test_parse_graph_families():
+    assert parse_graph("er:n=50,p=0.2").n == 50
+    assert parse_graph("ba:n=60,m=3").n == 60
+    assert parse_graph("road:side=5").n == 25
+    assert parse_graph("caveman:c=3,k=4").n == 12
+
+
+def test_parse_graph_unknown_family():
+    with pytest.raises(ValueError, match="unknown graph family"):
+        parse_graph("nope:n=10")

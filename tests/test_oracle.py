@@ -1,7 +1,7 @@
 """Oracle BK + RMCE reductions vs brute force (the semantics ground truth)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st  # optional-hypothesis shim
 
 from repro.core import oracle
 from repro.graph import erdos_renyi, from_edge_list, moon_moser

@@ -1,7 +1,7 @@
 """Global reduction (§4), dynamic reduction (§5), X-reduction (§6) unit tests."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, strategies as st  # optional-hypothesis shim
 
 import jax.numpy as jnp
 
