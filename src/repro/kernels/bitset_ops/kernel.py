@@ -3,15 +3,35 @@
 Three fused primitives back the MCE engine's inner loop (see DESIGN.md §3):
 
 * `and_popcount_rows`  — out[k] = popcount(rows[k] & mask); the deg_P sweep.
-* `and_popcount_argmax` — the pivot-select: AND + popcount + running argmax
-  in one VMEM pass, so pivot scoring never materialises the (K,) score
-  vector in HBM.
+* `and_popcount_argmax` — the pivot-select: AND + popcount + validity
+  masking fused in one VMEM pass over the row tile; the final (K,)→scalar
+  argmax is a jnp reduction on the (K, 1) int32 scores (negligible traffic
+  next to the (K, W) row load the kernel fuses away).
 * `and_popcount_many`  — one row matrix against an (M, W) batch of masks;
   the X-subset maximality test shape.
 
 All are tiled so each grid step keeps a (BK, W) row tile + the mask(s) in
 VMEM. On TPU the AND+popcount pipeline runs on the VPU (8×128 lanes); W is
 padded to the 128-lane boundary by the caller so loads are aligned.
+
+Two structural rules keep the kernels correct and compilable beyond the
+interpret-mode tests:
+
+* **Batch-safety.** The engine reaches these kernels under `jax.vmap`
+  (`loop.run_bucket` vmaps `run_root`; per-example tracers are 2-D so the
+  ops dispatcher takes the pallas path and the pallas batching rule
+  prepends the batch axis to the grid). Kernel bodies therefore must not
+  read `pl.program_id` or accumulate across grid steps in revisited output
+  blocks — under vmap `program_id(0)` becomes the batch index and such
+  state goes wrong silently. Each grid step writes only its own block;
+  cross-tile reductions happen in jnp outside the `pallas_call`.
+  Enforced by the vmap parity tests in tests/test_bitset_ops_dispatch.py.
+* **Mosaic-lowerable shapes/ops.** Word-axis popcount sums accumulate in
+  float32 (Mosaic has no integer-axis reductions; exact for counts < 2^24,
+  i.e. any W < 2^19) and every block keeps its last two dims (8, 128)-
+  divisible or equal to the full array dims. Enforced without hardware by
+  tests/test_kernels_tpu_lowering.py, which lowers every kernel (plain and
+  vmapped) for a TPU target via jax.export.
 
 These kernels exist because the ops execute once per BK tree node over the
 whole row matrix — the paper's measurement that set intersections are 73.6%
@@ -34,9 +54,8 @@ def _and_popcount_kernel(rows_ref, mask_ref, out_ref):
     rows = rows_ref[...]                      # (BK, W) uint32
     mask = mask_ref[...]                      # (1, W) uint32
     anded = jnp.bitwise_and(rows, mask)
-    out_ref[...] = jnp.sum(
-        jax.lax.population_count(anded).astype(jnp.int32), axis=1, keepdims=True
-    )
+    pc = jax.lax.population_count(anded).astype(jnp.float32)
+    out_ref[...] = jnp.sum(pc, axis=1, keepdims=True).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -65,33 +84,14 @@ def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray,
     return out[:k, 0]
 
 
-def _and_popcount_argmax_kernel(rows_ref, mask_ref, valid_ref,
-                                best_ref, idx_ref, *, block_k: int):
-    i = pl.program_id(0)
+def _and_popcount_argmax_kernel(rows_ref, mask_ref, valid_ref, scores_ref):
     rows = rows_ref[...]                      # (BK, W) uint32
     mask = mask_ref[...]                      # (1, W) uint32
     valid = valid_ref[...]                    # (BK, 1) int32 (0/1)
-    counts = jnp.sum(
-        jax.lax.population_count(jnp.bitwise_and(rows, mask)).astype(jnp.int32),
-        axis=1, keepdims=True)                # (BK, 1)
-    scores = jnp.where(valid != 0, counts, jnp.int32(-1))
-    tile_best = jnp.max(scores)
-    # first-max within the tile, matching jnp.argmax tie-breaking
-    hit = scores[:, 0] == tile_best
-    pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)[:, 0]
-    tile_arg = jnp.min(jnp.where(hit, pos, jnp.int32(block_k))) + i * block_k
-
-    # grid steps are sequential on TPU: accumulate a running (best, argmax)
-    # in the revisited (1, 1) output block; strict `>` keeps the first max.
-    @pl.when(i == 0)
-    def _init():
-        best_ref[0, 0] = tile_best
-        idx_ref[0, 0] = tile_arg
-
-    @pl.when((i > 0) & (tile_best > best_ref[0, 0]))
-    def _update():
-        best_ref[0, 0] = tile_best
-        idx_ref[0, 0] = tile_arg
+    pc = jax.lax.population_count(jnp.bitwise_and(rows, mask))
+    counts = jnp.sum(pc.astype(jnp.float32), axis=1,
+                     keepdims=True).astype(jnp.int32)   # (BK, 1)
+    scores_ref[...] = jnp.where(valid != 0, counts, jnp.int32(-1))
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -101,6 +101,14 @@ def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
                         interpret: bool = True):
     """Fused pivot-select. rows: (K, W) uint32, mask: (W,) uint32,
     valid: (K,) bool -> (idx int32, best int32) with invalid rows scoring -1.
+
+    The kernel fuses AND + popcount + validity masking per row tile; the
+    argmax over the resulting (K,) scores runs in jnp outside the
+    `pallas_call`. No grid step carries state (no `program_id`, no
+    revisited output blocks), so vmap's batched-grid lowering — the
+    engine's real call pattern — stays correct; jnp.argmax tie-breaking
+    (first max wins, all-invalid -> (0, -1)) matches the ref by
+    construction.
     """
     k, w = rows.shape
     bk = min(block_k, k)
@@ -110,29 +118,27 @@ def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
         rows = jnp.pad(rows, ((0, k_pad - k), (0, 0)))
         valid_i = jnp.pad(valid_i, (0, k_pad - k))   # pad rows are invalid
     grid = (k_pad // bk,)
-    best, idx = pl.pallas_call(
-        functools.partial(_and_popcount_argmax_kernel, block_k=bk),
-        out_shape=(jax.ShapeDtypeStruct((1, 1), jnp.int32),
-                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+    scores = pl.pallas_call(
+        _and_popcount_argmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((k_pad, 1), jnp.int32),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, w), lambda i: (i, 0)),
             pl.BlockSpec((1, w), lambda i: (0, 0)),
             pl.BlockSpec((bk, 1), lambda i: (i, 0)),
         ],
-        out_specs=(pl.BlockSpec((1, 1), lambda i: (0, 0)),
-                   pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        out_specs=pl.BlockSpec((bk, 1), lambda i: (i, 0)),
         interpret=interpret,
-    )(rows, mask[None, :], valid_i[:, None])
-    return idx[0, 0], best[0, 0]
+    )(rows, mask[None, :], valid_i[:, None])[:k, 0]
+    return jnp.argmax(scores).astype(jnp.int32), jnp.max(scores)
 
 
 def _and_popcount_many_kernel(rows_ref, masks_ref, out_ref):
     rows = rows_ref[...]                      # (BK, W) uint32
     masks = masks_ref[...]                    # (BM, W) uint32
     anded = jnp.bitwise_and(rows[None, :, :], masks[:, None, :])
-    out_ref[...] = jnp.sum(
-        jax.lax.population_count(anded).astype(jnp.int32), axis=2)
+    pc = jax.lax.population_count(anded).astype(jnp.float32)
+    out_ref[...] = jnp.sum(pc, axis=2).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k",
@@ -148,14 +154,18 @@ def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray,
     assert w == wm, f"word-width mismatch {w} vs {wm}"
     bk = min(block_k, k)
     bm = min(block_m, m)
-    # VMEM budget: the kernel body materialises (BM, BK, W) uint32 + int32
+    # VMEM budget: the kernel body materialises (BM, BK, W) uint32 + f32
     # intermediates (8 B/elem); cap the tile at ~4 MiB so wide-W buckets
     # (e.g. W=32 at 256×256 blocks) don't blow VMEM on the compiled path.
+    # Shrink bm first (Mosaic needs a shrunk second-minor block dim to stay
+    # 8-divisible), then bk in 128-lane multiples (the out block's last dim
+    # must be 128-divisible unless it equals the padded array dim) — shapes
+    # that trip this clamp are covered by test_kernels_tpu_lowering.py.
     max_elems = 1 << 19
-    while bm * bk * w > max_elems and bk > 8:
-        bk = -(-bk // 2)
     while bm * bk * w > max_elems and bm > 8:
-        bm = -(-bm // 2)
+        bm = max(8, (bm // 2 + 7) & ~7)
+    while bm * bk * w > max_elems and bk > 128:
+        bk = max(128, (bk // 2 + 127) & ~127)
     k_pad = -(-k // bk) * bk
     m_pad = -(-m // bm) * bm
     if k_pad != k:

@@ -9,8 +9,16 @@ there is exactly one choke point to measure, swap, and accelerate.
 On TPU the Pallas kernels are used for the 2-D shapes the engine's hot loop
 emits; on CPU (this container) the pure-jnp ref is both the oracle and the
 execution path (the Pallas kernels are validated in interpret mode by
-tests). Leading batch dims always fall back to the ref path. The engine's
-semantics never depend on the path taken.
+tests). The engine's semantics never depend on the path taken.
+
+Batching: the `ndim` guards below only catch *explicit* leading batch dims
+(a caller handing in a 3-D array falls back to ref). They can NOT catch
+`jax.vmap` — inside vmap the per-example tracer is 2-D, so the pallas path
+is taken and jax's pallas batching rule prepends the batch axis to the
+kernel grid. That IS the engine's real call pattern (`loop.run_bucket`
+vmaps `run_root`), so the kernels are written batch-safe (no `program_id`
+reads, no revisited output blocks — see kernel.py) and vmap parity is
+tested per kernel in tests/test_bitset_ops_dispatch.py.
 """
 from __future__ import annotations
 
@@ -34,8 +42,9 @@ def popcount_words(bits: jnp.ndarray) -> jnp.ndarray:
 def and_popcount_rows(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """popcount(rows & mask) per row; dispatches pallas on TPU, jnp elsewhere.
 
-    Supports leading batch dims via the ref path; the pallas path handles the
-    2-D case that the engine's hot loop emits.
+    Explicit leading batch dims take the ref path; under jax.vmap the
+    tracer is 2-D so the pallas path is taken and the pallas_call itself
+    is batched (see module docstring).
     """
     if _on_tpu() and rows.ndim == 2:
         return kernel.and_popcount_rows(rows, mask, interpret=False)
@@ -51,7 +60,8 @@ def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
                         valid: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused pivot-select: (first-argmax, max) of popcount(rows & mask) over
-    `valid` rows; invalid rows score -1. One VMEM pass on TPU."""
+    `valid` rows; invalid rows score -1. On TPU the AND+popcount+masking
+    fuse in one Pallas pass and the argmax runs in jnp on the scores."""
     if _on_tpu() and rows.ndim == 2 and valid is not None:
         return kernel.and_popcount_argmax(rows, mask, valid, interpret=False)
     return ref.and_popcount_argmax(rows, mask, valid)

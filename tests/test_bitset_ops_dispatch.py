@@ -1,9 +1,13 @@
 """bitset_ops layer: fused-kernel parity edge cases + dispatcher routing.
 
 Covers the shapes the Pallas path must survive — K not a multiple of
-block_k, W at/over the 128-lane pad boundary — plus the dispatch contract:
-2-D on TPU goes to the kernel, leading batch dims always fall back to ref.
+block_k, W at/over the 128-lane pad boundary, and jax.vmap over the kernel
+(the engine's real call pattern: the batching rule prepends the batch axis
+to the grid, which a kernel reading program_id or revisiting output blocks
+gets silently wrong) — plus the dispatch contract: 2-D on TPU goes to the
+kernel, explicit leading batch dims fall back to ref.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -108,12 +112,88 @@ def test_and_popcount_rows_pad_boundaries(k, w, block_k):
 
 
 # --------------------------------------------------------------------------
+# vmap parity: loop.run_bucket vmaps run_root, so on TPU the kernels run
+# with a batched grid — inside vmap the per-example tracer is 2-D and the
+# ops dispatcher takes the pallas path (the ndim guard cannot see vmap).
+# These tests run the batching rule in interpret mode; they fail for any
+# kernel that accumulates across grid steps keyed on program_id (the
+# batch axis is prepended to the grid, so program_id(0) becomes the batch
+# index and only batch element 0 would initialise its output).
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,w,block_k", [
+    (3, 100, 8, 32),              # several tiles per example
+    (4, 33, 4, 16),               # K % block_k != 0
+    (2, 7, 128, 4),               # W at the lane boundary
+])
+def test_vmap_and_popcount_rows_parity(b, k, w, block_k):
+    rows = jnp.asarray(_rand((b, k, w), b + k))
+    mask = jnp.asarray(_rand((b, w), b * k))
+    got = jax.vmap(lambda r, m: bk.and_popcount_rows(
+        r, m, block_k=block_k, interpret=True))(rows, mask)
+    want = ref.and_popcount_rows(rows, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,k,w,block_k", [
+    (3, 100, 8, 32),
+    (4, 33, 4, 16),               # K % block_k != 0
+    (5, 256, 2, 64),
+])
+def test_vmap_and_popcount_argmax_parity(b, k, w, block_k):
+    rng = np.random.default_rng(b * k + w)
+    rows = jnp.asarray(_rand((b, k, w), b + k + w))
+    mask = jnp.asarray(_rand((b, w), b * k + 1))
+    valid = jnp.asarray(rng.random((b, k)) < 0.7)
+    gi, gb = jax.vmap(lambda r, m, v: bk.and_popcount_argmax(
+        r, m, v, block_k=block_k, interpret=True))(rows, mask, valid)
+    wi, wb = ref.and_popcount_argmax(rows, mask, valid)
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(wb))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_vmap_and_popcount_argmax_every_batch_element_initialised():
+    """Regression: per-example answers must not depend on batch position.
+    Identical examples stacked B times must all return batch element 0's
+    answer (an accumulator keyed on program_id(0) under vmap initialises
+    only batch 0 and offsets tile_arg by the batch index)."""
+    rows1 = _rand((40, 4), 11)
+    mask1 = _rand((4,), 12)
+    valid1 = np.random.default_rng(13).random(40) < 0.7
+    b = 4
+    rows = jnp.asarray(np.broadcast_to(rows1, (b, 40, 4)))
+    mask = jnp.asarray(np.broadcast_to(mask1, (b, 4)))
+    valid = jnp.asarray(np.broadcast_to(valid1, (b, 40)))
+    gi, gb = jax.vmap(lambda r, m, v: bk.and_popcount_argmax(
+        r, m, v, block_k=8, interpret=True))(rows, mask, valid)
+    wi, wb = ref.and_popcount_argmax(jnp.asarray(rows1), jnp.asarray(mask1),
+                                     jnp.asarray(valid1))
+    np.testing.assert_array_equal(np.asarray(gi), np.full(b, int(wi)))
+    np.testing.assert_array_equal(np.asarray(gb), np.full(b, int(wb)))
+
+
+@pytest.mark.parametrize("b,k,m,w", [
+    (3, 100, 33, 8),
+    (2, 300, 17, 4),              # K % block_k != 0
+    (4, 5, 9, 128),               # W at the lane boundary
+])
+def test_vmap_and_popcount_many_parity(b, k, m, w):
+    rows = jnp.asarray(_rand((b, k, w), k * m))
+    masks = jnp.asarray(_rand((b, m, w), k + m + w))
+    got = jax.vmap(lambda r, ms: bk.and_popcount_many(
+        r, ms, interpret=True))(rows, masks)
+    want = ref.and_popcount_many(rows, masks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
 # dispatcher routing: TPU 2-D -> kernel, batch dims -> ref fallback
 # --------------------------------------------------------------------------
 
 def test_dispatch_batch_dims_fall_back_to_ref(monkeypatch):
-    """Even when the backend claims TPU, >2-D input must take the ref path
-    (the pallas kernels are 2-D only)."""
+    """Even when the backend claims TPU, an explicit >2-D array must take
+    the ref path (the pallas wrappers are written for 2-D operands; vmap
+    batching is a separate, tested path — see the vmap tests above)."""
     monkeypatch.setattr(ops, "_on_tpu", lambda: True)
     sentinel = RuntimeError("pallas kernel must not be called for 3-D")
 
