@@ -24,8 +24,8 @@ def main():
     ckpt = os.path.join(tempfile.mkdtemp(), "mce_ckpt.json")
     drv = DistributedMCE(g, chunk=64, ckpt_path=ckpt,
                          cfg=EngineConfig(backend="pivot"))
-    print(f"shards={drv.n_shards} buckets="
-          f"{[(b.u_pad, b.num_roots) for b in drv.prep.buckets]}")
+    print(f"shards={drv.n_shards} (buckets stream from the host packer, "
+          f"double-buffered against device chunks)")
 
     # simulate a preemption after 2 chunks
     n = 0

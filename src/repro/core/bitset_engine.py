@@ -14,6 +14,7 @@ from repro.core.engine.frames import (EngineConfig, Frame,  # noqa: F401
                                       FrameStack)
 from repro.core.engine.loop import (MCEResult, enter_call, run,  # noqa: F401
                                     run_bucket, run_root)
+from repro.core.engine.pipeline import PrepStream  # noqa: F401
 from repro.core.engine.prepare import (PreparedMCE, RootBucket,  # noqa: F401
                                        _unpack_bits_np, prepare)
 

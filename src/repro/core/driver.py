@@ -1,11 +1,17 @@
 """Distributed MCE runtime: shard_map fan-out, load balancing, checkpointing.
 
-Deployment model for 1000+ nodes (DESIGN.md §5):
+Deployment model for 1000+ nodes (DESIGN.md §5–§6):
 
 * Root subproblems are independent — MCE is data-parallel over roots. The
   production mesh's `pod` × `data` axes form the root-parallel dimension;
   `model` stays size-1 for MCE (a bitset subtree does not split further
   without work-stealing, which SPMD forbids; instead we over-decompose).
+* **Streaming ingest**: the driver consumes `RootBucket`s from a
+  `PrepStream` as the host packs them, and runs **double-buffered**: chunk
+  *k* is dispatched asynchronously (device buffers donated), then the host
+  packs and uploads chunk *k+1* while the device works, and only then
+  blocks on chunk *k*'s counters. The host never sits between the device
+  and its next batch; `stats` records how much packing was hidden.
 * **Straggler mitigation** is static balancing: per bucket, roots are sorted
   by a cost estimate (|P|·2^{λ̂} proxy: universe² × mean row popcount) and
   dealt round-robin across shards, so each shard receives the same cost mass
@@ -15,17 +21,18 @@ Deployment model for 1000+ nodes (DESIGN.md §5):
 * **Fault tolerance**: after every chunk the accumulated counters + cursor
   are checkpointed host-side. The cursor counts roots completed in the
   *canonical cost-descending order* — a pure function of the prepared graph
-  only, NOT of the device count — so an *elastic* restart with a different
-  device count resumes at exactly the same root (tested in
-  tests/test_distributed.py::test_elastic_restart_different_device_count).
+  and the stream parameters, NOT of the device count — so an *elastic*
+  restart with a different device count resumes at exactly the same root
+  (tested in tests/test_distributed.py and tests/test_prep_stream.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import time
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +40,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import (EngineConfig, MCEResult, PreparedMCE,
-                               RootBucket, prepare, run_root)
+                               PrepStream, RootBucket, run_root)
 from repro.graph.csr import CSRGraph
+from repro.graph.pack import popcount_sum
 from repro.sharding.compat import shard_map
 
 COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px")
@@ -48,9 +56,12 @@ def estimate_costs(bucket: RootBucket) -> np.ndarray:
     """Per-root cost proxy: |P| * (1 + mean induced degree)^2.
 
     The BK subtree size grows with local density; this proxy ranks hub-like
-    roots above sparse ones, which is all static balancing needs."""
+    roots above sparse ones, which is all static balancing needs. Popcounts
+    go through the uint8 LUT (`graph.pack.popcount_sum`) — the previous
+    `np.unpackbits(bucket.a.view(np.uint8))` materialized 32× the bucket's
+    bytes just to sum bits."""
     p_sizes = np.array([len(u) for u in bucket.universes], dtype=np.float64)
-    pc = np.unpackbits(bucket.a.view(np.uint8), axis=-1).sum(axis=(1, 2))
+    pc = popcount_sum(bucket.a, axis=(1, 2)).astype(np.float64)
     mean_deg = pc / np.maximum(p_sizes, 1)
     return p_sizes * (1.0 + mean_deg) ** 2
 
@@ -73,6 +84,19 @@ def deal_roots(costs: np.ndarray, n_shards: int) -> List[np.ndarray]:
 # Sharded bucket execution
 # ---------------------------------------------------------------------------
 
+def _graph_fingerprint(g: CSRGraph) -> List[int]:
+    """Cheap O(m) identity of a CSR graph for the checkpoint schedule.
+
+    The cursor indexes a bucket sequence that is a pure function of the
+    graph too (DESIGN.md §6.4); a position-weighted xor fold of the
+    adjacency catches resuming against a different graph, not just
+    different stream parameters."""
+    idx = g.indices.astype(np.uint64)
+    weights = np.arange(1, len(idx) + 1, dtype=np.uint64)
+    h = int(np.bitwise_xor.reduce(idx * weights)) if len(idx) else 0
+    return [g.n, g.m, h]
+
+
 def _shard_batch(bucket: RootBucket, idx: np.ndarray, pad_to: int):
     """Gather + pad a per-shard slice of a bucket (pad roots are no-ops)."""
     take = idx[:pad_to] if len(idx) >= pad_to else idx
@@ -92,8 +116,8 @@ def _shard_batch(bucket: RootBucket, idx: np.ndarray, pad_to: int):
     return a, p0, xr, xa, rz
 
 
-@partial(jax.jit, static_argnames=("cfg", "mesh", "axis"))
-def _sharded_counts(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh, axis):
+def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
+                         axis):
     """Run a [n_shards, chunk, ...] batch under shard_map; psum counters.
 
     `axis` is a mesh axis name or a tuple of axis names (multi-pod: roots
@@ -114,12 +138,38 @@ def _sharded_counts(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh, axis):
     return {k: jnp.sum(v) for k, v in out.items()}
 
 
+# Chunk buffers are fresh device_puts the driver never reuses, so on real
+# accelerators they are donated: engine scratch aliases them instead of
+# growing the footprint while the next chunk's upload is in flight (double
+# buffering). Donation is a no-op on CPU (and warns per compile), and the
+# backend must not be probed at import time (a 1000-node launcher calls
+# jax.distributed.initialize() after importing this module) — so the
+# variant is chosen lazily at the first call.
+_sharded_counts_donated = partial(jax.jit,
+                                  static_argnames=("cfg", "mesh", "axis"),
+                                  donate_argnums=(0, 1, 2, 3, 4))(
+    _sharded_counts_impl)
+_sharded_counts_plain = partial(jax.jit,
+                                static_argnames=("cfg", "mesh", "axis"))(
+    _sharded_counts_impl)
+
+
+def _sharded_counts(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh, axis):
+    fn = (_sharded_counts_plain if jax.default_backend() == "cpu"
+          else _sharded_counts_donated)
+    return fn(a, p0, xr, xa, rz, cfg=cfg, mesh=mesh, axis=axis)
+
+
 @dataclasses.dataclass
 class DriverCheckpoint:
     bucket: int = 0
     roots_done: int = 0            # cursor in canonical (cost-desc) order —
     counters: dict = dataclasses.field(  # shard-count independent (elastic)
         default_factory=lambda: {k: 0 for k in COUNTER_KEYS})
+    schedule: dict = dataclasses.field(default_factory=dict)
+    # ^ identity of the bucket sequence the cursor indexes (stream params or
+    # materialized bucket shapes). The cursor is only meaningful against the
+    # SAME sequence; run() refuses to resume against a different one.
 
     def save(self, path: str) -> None:
         tmp = path + ".tmp"
@@ -133,19 +183,31 @@ class DriverCheckpoint:
             d = json.load(f)
         return DriverCheckpoint(bucket=d["bucket"],
                                 roots_done=d["roots_done"],
-                                counters=d["counters"])
+                                counters=d["counters"],
+                                schedule=d.get("schedule", {}))
 
 
 class DistributedMCE:
-    """Chunked, checkpointed, shard_map-parallel MCE over a device mesh."""
+    """Chunked, checkpointed, shard_map-parallel MCE over a device mesh.
 
-    def __init__(self, g: CSRGraph, *, mesh: Optional[Mesh] = None,
+    Ingest is streaming by default: buckets arrive from a `PrepStream` and
+    the run loop keeps one chunk in flight (see module docstring). Pass
+    `streaming=False` for the legacy materialize-everything-first mode
+    (exposed as `.prep`), or hand in an existing `PrepStream`/`PreparedMCE`
+    via `prep=` to reuse packed buckets across runs (launch.mce_service).
+    """
+
+    def __init__(self, g: Optional[CSRGraph] = None, *,
+                 mesh: Optional[Mesh] = None,
                  axis: str = "data", chunk: int = 1024,
                  ckpt_path: Optional[str] = None,
                  cfg: EngineConfig = EngineConfig(),
                  global_red: bool = True, x_red: bool = True,
                  bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
-                 split_threshold: Optional[int] = None):
+                 max_x_rows: int = 8192,
+                 split_threshold: Optional[int] = None,
+                 streaming: bool = True, stream_roots: int = 1024,
+                 prep: Union[PrepStream, PreparedMCE, None] = None):
         if mesh is None:
             # no axis_types kwarg: Auto is the default and the kwarg does
             # not exist on jax 0.4.x
@@ -158,66 +220,165 @@ class DistributedMCE:
         self.chunk = chunk
         self.cfg = cfg
         self.ckpt_path = ckpt_path
-        self.prep = prepare(g, global_red=global_red, x_red=x_red,
-                            bucket_sizes=bucket_sizes,
-                            split_threshold=split_threshold)
-        # canonical cost-desc order per bucket: the elastic schedule. A chunk
-        # step processes the next window of n_shards×chunk roots; shard s
-        # takes window[s::n_shards] (cost-balanced: window is cost-sorted).
-        self.order: List[np.ndarray] = [
-            canonical_order(estimate_costs(bucket))
-            for bucket in self.prep.buckets]
+        self.stats = {"host_pack_s": 0.0, "host_pack_overlap_s": 0.0,
+                      "dispatch_s": 0.0, "device_wait_s": 0.0, "chunks": 0}
+        self.prep: Optional[PreparedMCE] = None
+        self.stream: Optional[PrepStream] = None
+        if prep is not None and g is not None:
+            # a prepared stream fixes the graph and every prep-shaping
+            # knob; accepting both would silently run against prep's graph
+            raise ValueError("pass either a graph or prep=, not both")
+        if isinstance(prep, PreparedMCE):
+            self.prep = prep
+        elif isinstance(prep, PrepStream):
+            self.stream = prep
+        else:
+            if g is None:
+                raise ValueError("need a graph or a prepared stream")
+            # cache=False: a driver-owned stream is consumed once; caching
+            # every packed bucket would recreate materialized-mode peak host
+            # memory (pass a PrepStream(cache=True) for service-style reuse)
+            stream = PrepStream(g, global_red=global_red, x_red=x_red,
+                                bucket_sizes=bucket_sizes,
+                                max_x_rows=max_x_rows,
+                                split_threshold=split_threshold,
+                                stream_roots=stream_roots if streaming else 0,
+                                cache=not streaming)
+            if streaming:
+                self.stream = stream
+            else:
+                self.prep = stream.materialize()
+        if self.stream is not None:
+            st = self.stream
+            self._schedule = dict(
+                mode="stream", graph=_graph_fingerprint(st.g),
+                stream_roots=st.stream_roots,
+                bucket_sizes=list(st.bucket_sizes),
+                split_threshold=st.split_threshold, global_red=st.global_red,
+                x_red=st.x_red, max_x_rows=st.max_x_rows)
+        else:
+            self._schedule = dict(
+                mode="materialized", n=self.prep.n,
+                buckets=[[b.u_pad, b.num_roots] for b in self.prep.buckets])
+
+    # ---- bucket source (streamed or materialized) ------------------------
+
+    def _buckets(self) -> Iterator[RootBucket]:
+        if self.stream is not None:
+            return iter(self.stream)
+        return iter(self.prep.buckets)
 
     def run(self, resume: bool = True) -> MCEResult:
         state = DriverCheckpoint()
-        state.counters["cliques"] = len(self.prep.pre_reported)
+        if self.stream is not None:
+            self.stream.front()
+            pre0 = len(self.stream.pre_reported)
+        else:
+            pre0 = len(self.prep.pre_reported)
+        state.counters["cliques"] = pre0
         if resume and self.ckpt_path and os.path.exists(self.ckpt_path):
             state = DriverCheckpoint.load(self.ckpt_path)
+            if state.schedule and state.schedule != self._schedule:
+                raise ValueError(
+                    "checkpoint schedule mismatch: the cursor was written "
+                    f"against {state.schedule} but this driver runs "
+                    f"{self._schedule}; resume with identical stream "
+                    "parameters (device count may differ — that is the "
+                    "elastic dimension)")
+        state.schedule = self._schedule
 
         window = self.n_shards * self.chunk
-        for b, bucket in enumerate(self.prep.buckets):
+        pending: Optional[Tuple[dict, int, int, int]] = None
+        self._inflight_host = 0.0       # host work while `pending` flies
+        src = self._buckets()
+        b = -1
+        while True:
+            t0 = time.perf_counter()
+            bucket = next(src, None)        # streaming: host packs here,
+            dt = time.perf_counter() - t0   # overlapped with the device chunk
+            self.stats["host_pack_s"] += dt
+            if pending is not None:
+                self._inflight_host += dt
+            if bucket is None:
+                break
+            b += 1
             if b < state.bucket:
-                continue
-            total = len(self.order[b])
+                continue                    # resume: replayed, not re-run
+            total = bucket.num_roots
+            if bucket.cost_order is None:   # memo: cached-bucket replays
+                bucket.cost_order = canonical_order(estimate_costs(bucket))
+            order = bucket.cost_order
             done = state.roots_done if b == state.bucket else 0
             while done < total:
-                counts = self._run_chunk(b, done, min(done + window, total))
-                done = min(done + window, total)
-                for k in COUNTER_KEYS:
-                    state.counters[k] += int(counts[k])
-                state.bucket, state.roots_done = b, done
-                if self.ckpt_path:
-                    state.save(self.ckpt_path)
-            state.roots_done = 0
-        return MCEResult(cliques=state.counters["cliques"],
+                hi = min(done + window, total)
+                t0 = time.perf_counter()
+                handle = self._run_chunk(bucket, order[done:hi])
+                dt = time.perf_counter() - t0   # gather/pad/upload: host work
+                self.stats["dispatch_s"] += dt
+                self.stats["host_pack_s"] += dt
+                if pending is not None:
+                    self._inflight_host += dt
+                    self._settle(pending, state)
+                pending = (*handle, b, hi)
+                done = hi
+        if pending is not None:
+            self._settle(pending, state)
+
+        late = len(self.stream.late_reported) if self.stream is not None else 0
+        return MCEResult(cliques=state.counters["cliques"] + late,
                          calls=state.counters["calls"],
                          branches=state.counters["branches"],
                          sum_px=state.counters["sum_px"],
-                         pre_reported=len(self.prep.pre_reported))
+                         pre_reported=pre0 + late)
 
-    def _run_chunk(self, b: int, lo: int, hi: int):
-        bucket = self.prep.buckets[b]
-        window = self.order[b][lo:hi]
+    # ---- chunk pipeline --------------------------------------------------
+
+    def _run_chunk(self, bucket: RootBucket, window: np.ndarray):
+        """Gather/pad + upload + *asynchronously* dispatch one chunk.
+
+        Returns (unrealized device counters, n_pad); the caller settles the
+        previous chunk after dispatching this one, so host pack/upload of
+        chunk k+1 overlaps device execution of chunk k."""
         slices = [window[s::self.n_shards] for s in range(self.n_shards)]
         pad_to = max(len(s) for s in slices)
-        parts = [_shard_batch_slice(bucket, s, pad_to) for s in slices]
+        parts = [_shard_batch(bucket, s, pad_to) for s in slices]
         n_pad = sum(pad_to - len(s) for s in slices)
-        a = np.stack([p[0] for p in parts])
-        p0 = np.stack([p[1] for p in parts])
-        xr = np.stack([p[2] for p in parts])
-        xa = np.stack([p[3] for p in parts])
-        rz = np.stack([p[4] for p in parts])
+        stacked = (np.stack([p[i] for p in parts]) for i in range(5))
         sharding = NamedSharding(self.mesh, P(self.axis))
-        a, p0, xr, xa, rz = (jax.device_put(t, sharding)
-                             for t in (a, p0, xr, xa, rz))
+        a, p0, xr, xa, rz = (jax.device_put(t, sharding) for t in stacked)
         out = _sharded_counts(a, p0, xr, xa, rz, self.cfg, self.mesh,
                               self.axis)
+        return out, n_pad
+
+    def _settle(self, pending, state: DriverCheckpoint) -> None:
+        """Block on a dispatched chunk, fold counters, checkpoint cursor."""
+        out, n_pad, b, hi = pending
+        t0 = time.perf_counter()
         out = jax.tree.map(lambda x: np.asarray(x), out)
+        wait = time.perf_counter() - t0
+        self.stats["device_wait_s"] += wait
+        # credit in-flight host time as hidden only when the settle proves
+        # the device was still busy; a zero wait means the device may have
+        # finished early, so that host time gets no overlap credit (the
+        # stat is a lower bound, never an optimistic one)
+        if wait > 1e-4:
+            self.stats["host_pack_overlap_s"] += self._inflight_host
+        self._inflight_host = 0.0
+        self.stats["chunks"] += 1
         # padded no-op roots contribute exactly one call each; remove them so
         # distributed counters match the single-host run bit-for-bit
         out["calls"] = out["calls"] - n_pad
-        return out
+        for k in COUNTER_KEYS:
+            state.counters[k] += int(out[k])
+        state.bucket, state.roots_done = b, hi
+        if self.ckpt_path:
+            state.save(self.ckpt_path)
 
+    @property
+    def overlap_fraction(self) -> float:
+        """Share of host ingest time hidden behind device compute.
 
-def _shard_batch_slice(bucket: RootBucket, idx: np.ndarray, pad_to: int):
-    return _shard_batch(bucket, idx, pad_to)
+        Conservative: in-flight host time counts as hidden only for chunks
+        whose settle still had to wait on the device (lower bound)."""
+        total = self.stats["host_pack_s"]
+        return self.stats["host_pack_overlap_s"] / total if total > 0 else 0.0

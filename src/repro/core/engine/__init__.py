@@ -3,7 +3,9 @@
 The CPU paper's recursive, pointer-chasing search is re-derived as
 fixed-shape bitset dataflow, split into swappable layers:
 
-* `prepare`    — host-side reductions, ordering, packing, bucketing
+* `prepare`    — fixed-shape containers + one-shot materializing API
+* `pipeline`   — staged streaming ingest (reduce → order → stage → pack),
+                 yielding `RootBucket`s incrementally (`PrepStream`)
 * `frames`     — frame/stack layout, config, counter carry
 * `reductions` — dynamic degree-0/1/|P|−1 lemmas as pure frame functions
 * `pivot`      — pivot/branch-selection strategies behind one interface
@@ -17,5 +19,6 @@ thin re-export shim for existing callers.
 from repro.core.engine.frames import EngineConfig, Frame, FrameStack  # noqa: F401
 from repro.core.engine.loop import (MCEResult, enter_call, run,  # noqa: F401
                                     run_bucket, run_root)
+from repro.core.engine.pipeline import PrepStream, RootSpec  # noqa: F401
 from repro.core.engine.prepare import (PreparedMCE, RootBucket,  # noqa: F401
                                        prepare)

@@ -171,10 +171,12 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
         x_red: bool = True, backend: str = "pivot",
         enumerate_cliques: bool = False, out_cap: int = 4096,
         bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
+        max_x_rows: int = 8192,
         split_threshold: Optional[int] = None) -> MCEResult:
     """End-to-end single-host MCE: prepare on host, run buckets on device."""
     prep = prepare(g, global_red=global_red, x_red=x_red,
-                   bucket_sizes=bucket_sizes, split_threshold=split_threshold)
+                   bucket_sizes=bucket_sizes, max_x_rows=max_x_rows,
+                   split_threshold=split_threshold)
     cfg = EngineConfig(dynamic_red=dynamic_red, backend=backend,
                        out_cap=out_cap if enumerate_cliques else 0)
     total = MCEResult(cliques=len(prep.pre_reported), calls=0, branches=0,

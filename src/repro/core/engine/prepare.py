@@ -1,18 +1,20 @@
-"""Host-side MCE preparation: reductions, ordering, packing, bucketing.
+"""Host-side MCE preparation: containers + the one-shot `prepare()` API.
 
-Turns a CSR graph into fixed-shape `RootBucket` batches of bitset
-subproblems (DESIGN.md §2.1–§2.2). Pure numpy — nothing here runs on
-device; the device side consumes the packed buckets via `engine.loop`.
+The actual work — reductions, ordering, staging, packing — lives in the
+staged streaming pipeline (`engine.pipeline.PrepStream`, DESIGN.md §6);
+this module keeps the fixed-shape containers the device side consumes
+and the legacy materializing entry point. Pure numpy — nothing here runs
+on device; the device side consumes packed buckets via `engine.loop`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-from repro.graph.order import degeneracy_order
+from repro.graph.pack import pack_bits as _pack_bits  # noqa: F401 (legacy name)
 
 WORD = 32
 
@@ -31,6 +33,9 @@ class RootBucket:
     rsz0: np.ndarray                # (R,) int32 |R| at entry (>1 for split roots)
     bases: List[tuple]              # per-root base clique vertices
     universes: List[np.ndarray]     # per-root local->global id maps
+    cost_order: Optional[np.ndarray] = None   # driver memo: canonical
+    # cost-descending root order — cached so service-style replays of a
+    # cached bucket skip the O(packed bytes) cost rescan
 
     @property
     def num_roots(self) -> int:
@@ -47,14 +52,6 @@ class PreparedMCE:
     rank: np.ndarray
 
 
-def _pack_bits(ids: np.ndarray, words: int) -> np.ndarray:
-    out = np.zeros(words, dtype=np.uint32)
-    if len(ids):
-        np.bitwise_or.at(out, ids // WORD,
-                         np.uint32(1) << (ids % WORD).astype(np.uint32))
-    return out
-
-
 def _unpack_bits_np(bits: np.ndarray) -> np.ndarray:
     out = []
     for wi, word in enumerate(bits):
@@ -66,137 +63,28 @@ def _unpack_bits_np(bits: np.ndarray) -> np.ndarray:
     return np.array(out, dtype=np.int64)
 
 
-def _stage_subproblem(staged, bucket_sizes, base, p_set, x_set,
-                      adj_sorted, rank):
-    """Pack one (R=base, P=p_set, X=x_set) subproblem into its bucket."""
-    p_ids = np.array(sorted(p_set, key=lambda u: rank[u]), dtype=np.int64)
-    u_size = len(p_ids)
-    bucket = next((b for b in bucket_sizes if u_size <= b), None)
-    if bucket is None:
-        raise ValueError(f"universe {u_size} exceeds largest bucket")
-    words = bucket // WORD
-    a_rows = np.zeros((bucket, words), dtype=np.uint32)
-    for j, u in enumerate(p_ids):
-        mask = np.isin(p_ids, adj_sorted[int(u)], assume_unique=True)
-        a_rows[j] = _pack_bits(np.nonzero(mask)[0].astype(np.int64), words)
-    xr = []
-    for x in sorted(x_set, key=lambda u: rank[u]):
-        mask = np.isin(p_ids, adj_sorted[int(x)], assume_unique=True)
-        if mask.any():
-            xr.append(_pack_bits(np.nonzero(mask)[0].astype(np.int64), words))
-    staged[bucket].append(dict(
-        root=base[0], base=tuple(base),
-        p0=_pack_bits(np.arange(u_size), words), a=a_rows,
-        x_rows=xr, universe=p_ids))
-
-
-def _split_root(v, p_ids, x_set, adj, rank):
-    """Expand root (R={v}, P, X) one pivot-pruned BK level on the host.
-
-    Yields (base=(v, w), P_w, X_w) per branch vertex w — identical semantics
-    to one level of Algorithm 2, so clique sets are preserved exactly."""
-    p_set = set(p_ids.tolist())
-    pool = p_set | x_set
-    pivot = max(pool, key=lambda u: (len(adj[u] & p_set), -rank[u]))
-    branch = [w for w in p_ids.tolist() if w not in adj[pivot]]
-    p_cur = set(p_set)
-    x_cur = set(x_set)
-    for w in branch:
-        p_cur.discard(w)
-        yield (v, w), p_cur & adj[w], x_cur & adj[w]
-        x_cur.add(w)
-
-
 def prepare(g: CSRGraph, *, global_red: bool = True, x_red: bool = True,
             bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
             max_x_rows: int = 8192,
             split_threshold: Optional[int] = None) -> PreparedMCE:
     """Host preprocessing: reductions, ordering, bitset packing, bucketing.
 
-    split_threshold: straggler mitigation by over-decomposition — roots with
-    |P| > threshold are expanded ONE BK level on the host (pivot-pruned
-    branching, exactly Algorithm 2's first level) into per-branch
-    subproblems with |R|=2. The search tree is re-dealt at a finer grain so
-    one pathological hub cannot stall its whole shard (DESIGN.md §5)."""
-    pre_reported: List[frozenset] = []
-    if global_red:
-        from repro.core.global_reduction import global_reduce_host
+    One-shot wrapper over the streaming pipeline with no mid-stream
+    flushes (`stream_roots=0`), which reproduces the legacy layout: one
+    `RootBucket` per bucket size, roots in degeneracy order. Roots whose
+    |P| exceeds the largest bucket — or whose X rows exceed `max_x_rows`
+    — are auto-split one pivot-pruned BK level at a time (recursively)
+    instead of raising, so any graph runs without hand-tuning.
 
-        red = global_reduce_host(g)
-        g_work = red.graph
-        pre_reported = list(red.reported)
-    else:
-        g_work = g
+    split_threshold: straggler mitigation by over-decomposition — roots
+    with |P| > threshold are expanded ONE BK level on the host
+    (pivot-pruned branching, exactly Algorithm 2's first level) into
+    per-branch subproblems. The search tree is re-dealt at a finer grain
+    so one pathological hub cannot stall its whole shard (DESIGN.md §5).
+    """
+    from repro.core.engine.pipeline import PrepStream
 
-    order, rank, lam = degeneracy_order(g_work)
-    adj = [set(g_work.neighbors(v).tolist()) for v in range(g_work.n)]
-    adj_sorted = [g_work.neighbors(v) for v in range(g_work.n)]
-
-    kept_x: Optional[List[Set[int]]] = None
-    if x_red:
-        from repro.core.xreduction import x_prune_roots
-
-        kept_x = x_prune_roots(adj, order, rank)
-
-    staged: Dict[int, List[dict]] = {b: [] for b in bucket_sizes}
-    for i in range(g_work.n):
-        v = int(order[i])
-        if not adj[v]:
-            continue
-        p_ids = np.array(sorted((u for u in adj[v] if rank[u] > i),
-                                key=lambda u: rank[u]), dtype=np.int64)
-        if len(p_ids) == 0:
-            continue  # all its cliques are found from earlier roots
-        u_size = len(p_ids)
-        bucket = next((b for b in bucket_sizes if u_size <= b), None)
-        if bucket is None:
-            raise ValueError(f"universe {u_size} exceeds largest bucket")
-        x_set = kept_x[i] if kept_x is not None else {u for u in adj[v]
-                                                      if rank[u] < i}
-        if split_threshold is not None and u_size > split_threshold:
-            for base, p_sub, x_sub in _split_root(v, p_ids, x_set, adj, rank):
-                if not p_sub:
-                    if not x_sub:
-                        pre_reported.append(frozenset(base))
-                    continue
-                _stage_subproblem(staged, bucket_sizes, base, p_sub, x_sub,
-                                  adj_sorted, rank)
-            continue
-        _stage_subproblem(staged, bucket_sizes, (v,), set(p_ids.tolist()),
-                          x_set, adj_sorted, rank)
-
-    buckets: List[RootBucket] = []
-    for b in bucket_sizes:
-        items = staged[b]
-        if not items:
-            continue
-        xc = max(max((len(it["x_rows"]) for it in items), default=0), 1)
-        xc = 1 << (xc - 1).bit_length()     # pow2 pad: bounded recompile count
-        if xc > max_x_rows:
-            raise ValueError(f"X0 rows {xc} exceed cap {max_x_rows}")
-        words = b // WORD
-        r = len(items)
-        a = np.zeros((r, b, words), dtype=np.uint32)
-        p0 = np.zeros((r, words), dtype=np.uint32)
-        x_rows = np.zeros((r, xc, words), dtype=np.uint32)
-        x_alive = np.zeros((r, xc), dtype=bool)
-        roots = np.zeros(r, dtype=np.int64)
-        rsz0 = np.ones(r, dtype=np.int32)
-        bases = []
-        universes = []
-        for k, it in enumerate(items):
-            a[k] = it["a"]
-            p0[k] = it["p0"]
-            for j, row in enumerate(it["x_rows"]):
-                x_rows[k, j] = row
-                x_alive[k, j] = True
-            roots[k] = it["root"]
-            base = it.get("base", (it["root"],))
-            bases.append(base)
-            rsz0[k] = len(base)
-            universes.append(it["universe"])
-        buckets.append(RootBucket(u_pad=b, x_pad=xc, a=a, p0=p0, x_rows=x_rows,
-                                  x_alive0=x_alive, roots=roots, rsz0=rsz0,
-                                  bases=bases, universes=universes))
-    return PreparedMCE(buckets=buckets, pre_reported=pre_reported, n=g.n,
-                       degeneracy=lam, order=order, rank=rank)
+    return PrepStream(g, global_red=global_red, x_red=x_red,
+                      bucket_sizes=bucket_sizes, max_x_rows=max_x_rows,
+                      split_threshold=split_threshold, stream_roots=0,
+                      cache=False).materialize()

@@ -17,13 +17,65 @@ Both preserve the paper's invariant  mc(G) = mc(G') + α(ΔV, ΔE).
 from __future__ import annotations
 
 import dataclasses
-from typing import FrozenSet, List, Tuple
+from collections.abc import Sequence
+from typing import FrozenSet, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph, from_edge_list
+
+
+class CliqueReports(Sequence):
+    """Lazy, concatenable sequence of advance-reported cliques.
+
+    The vectorized pre-passes report 10^5+ 2-cliques on hub-heavy graphs;
+    materializing a frozenset per edge costs ~3µs each — more than the
+    entire vectorized sweep. Segments therefore stay as (k, 2) edge
+    arrays (or already-built frozenset lists) and rows become frozensets
+    only when someone actually enumerates. The counting-mode driver only
+    ever calls `len()`, which is O(#segments)."""
+
+    __slots__ = ("_segs",)
+
+    def __init__(self, segments=()):
+        self._segs = [s for s in segments if len(s)]
+
+    def __len__(self):
+        return sum(len(s) for s in self._segs)
+
+    def __iter__(self):
+        for s in self._segs:
+            if isinstance(s, np.ndarray):
+                for pair in s.tolist():
+                    yield frozenset(pair)
+            else:
+                yield from s
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        if i < 0:
+            i += len(self)
+        if i < 0:
+            raise IndexError(i)
+        for s in self._segs:
+            if i < len(s):
+                return frozenset(s[i].tolist()) \
+                    if isinstance(s, np.ndarray) else s[i]
+            i -= len(s)
+        raise IndexError(i)
+
+    def __add__(self, other):
+        segs = list(self._segs)
+        segs += other._segs if isinstance(other, CliqueReports) else [list(other)]
+        return CliqueReports(segs)
+
+    def __radd__(self, other):
+        if isinstance(other, (list, CliqueReports)):
+            return CliqueReports([list(other)] + self._segs)
+        return NotImplemented
 
 
 @dataclasses.dataclass
@@ -47,8 +99,17 @@ def _common_neighbor_exists(adj: dict, u: int, v: int, exclude: int = -1) -> int
 
 def global_reduce_host(g: CSRGraph, vertex_rule: bool = True,
                        edge_rule: bool = True) -> GlobalReduction:
-    """Cascaded global reduction to fixpoint (Algorithms 5 + 6)."""
-    adj = {v: set(g.neighbors(v).tolist()) for v in range(g.n)}
+    """Cascaded global reduction to fixpoint (Algorithms 5 + 6).
+
+    Only vertices with at least one edge enter the cascade: isolated
+    vertices are removed by Lemma 1 with no report and no edge effects,
+    and the returned deletion counters are recomputed from the output
+    graph anyway — on pre-peeled residual graphs this skips the bulk of
+    the queue."""
+    idx_list = g.indices.tolist()
+    ptr = g.indptr
+    active = np.nonzero(np.diff(ptr) > 0)[0]
+    adj = {int(v): set(idx_list[ptr[v]:ptr[v + 1]]) for v in active}
     reported: List[FrozenSet[int]] = []
     deleted_v = 0
     deleted_e = 0
@@ -70,7 +131,7 @@ def global_reduce_host(g: CSRGraph, vertex_rule: bool = True,
         deleted_v += 1
 
     if vertex_rule:
-        queue = [v for v in range(g.n) if len(adj[v]) <= 2]
+        queue = [v for v in adj if len(adj[v]) <= 2]
         in_q = set(queue)
         qi = 0
         while qi < len(queue):
@@ -117,7 +178,7 @@ def global_reduce_host(g: CSRGraph, vertex_rule: bool = True,
         # Non-triangle edge reduction (Algorithm 6), cascading back into
         # vertex reduction for newly created low-degree vertices.
         visited = set()
-        edge_stack = [(u, v) for u in range(g.n) if alive[u]
+        edge_stack = [(u, v) for u in adj if alive[u]
                       for v in adj[u] if u < v]
         for (u, v) in edge_stack:
             if v not in adj[u]:
@@ -161,7 +222,7 @@ def global_reduce_host(g: CSRGraph, vertex_rule: bool = True,
                 visited.add((min(u, w), max(u, w)))
                 visited.add((min(v, w), max(v, w)))
 
-    edges = [(u, v) for u in range(g.n) if alive[u] for v in adj[u] if u < v]
+    edges = [(u, v) for u in adj if alive[u] for v in adj[u] if u < v]
     g2 = from_edge_list(g.n, np.array(edges, dtype=np.int64) if edges else np.zeros((0, 2), np.int64))
     # a vertex counts as deleted once it has no remaining edges (it can never
     # appear in a clique of the reduced search)
@@ -185,22 +246,167 @@ def global_reduce_jnp(src: jnp.ndarray, dst: jnp.ndarray, n: int,
     degree-2 and edge rules need clique reporting, which the host path owns;
     on device they run inside the bitset engine as dynamic reductions, which
     subsume them at the root level). src/dst are the directed edge lists.
+
+    The degree vector is carried in the loop state so each round costs one
+    O(m) `segment_sum` (the cond used to recompute the full degree pass,
+    doubling the per-round edge traffic).
     """
 
+    def degrees(alive_e):
+        return jax.ops.segment_sum(alive_e.astype(jnp.int32), src,
+                                   num_segments=n)
+
     def body(state):
-        alive_v, alive_e, it = state
-        deg = jax.ops.segment_sum(alive_e.astype(jnp.int32), src, num_segments=n)
+        alive_v, alive_e, deg, it = state
         low = alive_v & (deg <= 1)
         alive_v2 = alive_v & ~low
         alive_e2 = alive_e & alive_v2[src] & alive_v2[dst]
-        return alive_v2, alive_e2, it + 1
+        return alive_v2, alive_e2, degrees(alive_e2), it + 1
 
     def cond(state):
-        alive_v, alive_e, it = state
-        deg = jax.ops.segment_sum(alive_e.astype(jnp.int32), src, num_segments=n)
+        alive_v, _alive_e, deg, it = state
         return jnp.any(alive_v & (deg <= 1)) & (it < max_rounds)
 
     alive_v = jnp.ones(n, dtype=bool)
     alive_e = jnp.ones(src.shape, dtype=bool)
-    alive_v, alive_e, _ = jax.lax.while_loop(cond, body, (alive_v, alive_e, jnp.int32(0)))
+    state = (alive_v, alive_e, degrees(alive_e), jnp.int32(0))
+    alive_v, alive_e, _, _ = jax.lax.while_loop(cond, body, state)
     return alive_v, alive_e
+
+
+def _peel_rounds_np(g: CSRGraph, max_rounds: int = 64) -> np.ndarray:
+    """Host mirror of `global_reduce_jnp`'s round-based deg≤1 peel.
+
+    Identical round semantics (all degree-≤1 vertices removed per round,
+    same `max_rounds` early-exit) so small-graph ingest skips the device
+    round trip yet produces bit-identical alive masks — parity is pinned
+    by tests/test_prep_stream.py.
+    """
+    src = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees())
+    dst = g.indices.astype(np.int64)
+    alive_v = np.ones(g.n, dtype=bool)
+    alive_e = np.ones(len(src), dtype=bool)
+    deg = np.bincount(src, minlength=g.n)
+    for _ in range(max_rounds):
+        low = alive_v & (deg <= 1)
+        if not low.any():
+            break
+        alive_v &= ~low
+        alive_e &= alive_v[src] & alive_v[dst]
+        deg = np.bincount(src[alive_e], minlength=g.n)
+    return alive_v
+
+
+def peel_low_degree(g: CSRGraph, use_device: Optional[bool] = None
+                    ) -> Tuple[CSRGraph, CliqueReports]:
+    """Degree-0/1 peel pre-pass for the ingest pipeline (DESIGN.md §6).
+
+    Runs the round-based deg≤1 cascade — on device via `global_reduce_jnp`
+    for large graphs, or its host mirror for small ones — then reconstructs
+    the advance reports exactly on the host: in a degree-≤1 cascade every
+    edge incident to a peeled vertex is removed at a degree-1 event, and
+    Lemma 2 reports that edge as a maximal 2-clique (degree-0 removals
+    remove no edges and report nothing). Each undirected edge is reported
+    once, which also covers the mutual degree-1 pair that a naive
+    per-removal replay would double-report.
+
+    Returns `(residual, reports)` where `residual` keeps the original
+    vertex ids (peeled vertices become isolated). The cascade may stop at
+    `max_rounds` on pathological path-like graphs; any leftover low-degree
+    vertices simply flow into the host cascade downstream, so correctness
+    never depends on the peel running to fixpoint.
+    """
+    if g.n == 0 or g.m == 0 or not np.any(g.degrees() == 1):
+        # deg-0 removals touch no edges and report nothing, so a graph
+        # without degree-1 vertices peels to itself
+        return g, CliqueReports()
+    if use_device is None:
+        use_device = (g.n + 2 * g.m) >= 200_000
+    if use_device:
+        src = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees())
+        av, _ = global_reduce_jnp(jnp.asarray(src, jnp.int32),
+                                  jnp.asarray(g.indices, jnp.int32), g.n)
+        alive = np.asarray(av)
+    else:
+        alive = _peel_rounds_np(g)
+    if alive.all():
+        return g, CliqueReports()
+    edges = g.edges().astype(np.int64)
+    touched = ~alive[edges[:, 0]] | ~alive[edges[:, 1]]
+    reports = CliqueReports([edges[touched]])
+    residual = from_edge_list(g.n, edges[~touched])
+    return residual, reports
+
+
+def _triangle_edge_mask(g: CSRGraph) -> np.ndarray:
+    """Per-undirected-edge mask: does the edge sit in at least one triangle?
+
+    Vectorized edge-iterator: for each edge expand the smaller-degree
+    endpoint's adjacency and membership-test the (other, w) pairs against
+    the directed CSR key array with one `searchsorted` — O(Σ_e min deg)
+    work, no per-edge python."""
+    from repro.graph.pack import _ranges
+
+    e = g.edges().astype(np.int64)
+    if len(e) == 0:
+        return np.zeros(0, dtype=bool)
+    n = g.n
+    deg = g.degrees()
+    swap = deg[e[:, 0]] > deg[e[:, 1]]
+    a = np.where(swap, e[:, 1], e[:, 0])
+    b = np.where(swap, e[:, 0], e[:, 1])
+    counts = deg[a]                              # ≥1: every endpoint has deg>0
+    kt = np.int32 if n * n < (1 << 31) else np.int64
+    w = g.indices[_ranges(g.indptr[a], counts)]
+    q = np.repeat(b.astype(kt), counts) * kt(n) + w.astype(kt)
+    dk = (np.repeat(np.arange(n, dtype=kt), deg) * kt(n)
+          + g.indices.astype(kt))                # CSR order — already sorted
+    if n * n <= (1 << 29):
+        # dense edge-membership bitmap (≤64MB): two gathers per query
+        # instead of a binary search per query
+        bm = np.zeros((n * n + 7) >> 3, dtype=np.uint8)
+        np.bitwise_or.at(bm, dk >> 3, np.uint8(1) << (dk & 7).astype(np.uint8))
+        hit = (bm[q >> 3] >> (q & 7).astype(np.uint8)) & np.uint8(1) != 0
+    else:
+        pos = np.minimum(np.searchsorted(dk, q), len(dk) - 1)
+        hit = dk[pos] == q
+    # per-edge any() over each contiguous neighbor segment (w == a never
+    # hits: u*n+u keys do not exist in a simple graph)
+    offs = np.cumsum(counts) - counts
+    return np.logical_or.reduceat(hit, offs)
+
+
+def reduce_prepass(g: CSRGraph, max_rounds: int = 16
+                   ) -> Tuple[CSRGraph, CliqueReports]:
+    """Vectorized global-reduction pre-pass for the ingest pipeline.
+
+    Alternates the deg-0/1 peel (`peel_low_degree`) with a *batch*
+    non-triangle edge sweep (Lemma 4) until fixpoint, so the python
+    cascade in `global_reduce_host` only ever sees the stubborn core —
+    on hub-heavy graphs this is >90% of the edge rule's work done in a
+    handful of numpy passes.
+
+    Batch validity: every edge of a triangle shares a neighbor with the
+    other two, so no triangle edge is Lemma-4-removable and no removable
+    edge witnesses a triangle — removing all currently non-triangle
+    edges at once equals SOME sequential order of Lemma 4 applications.
+    Edges that only *become* non-triangle after vertex deletions are
+    caught by the next round's peel+sweep or by the host cascade.
+    """
+    segments: List[np.ndarray] = []
+    for _ in range(max_rounds):
+        g2, r = peel_low_degree(g)
+        changed = g2 is not g
+        g = g2
+        segments += r._segs
+        if g.m == 0:
+            break
+        tri = _triangle_edge_mask(g)
+        if not tri.all():
+            e = g.edges().astype(np.int64)
+            segments.append(e[~tri])
+            g = from_edge_list(g.n, e[tri])
+            changed = True
+        if not changed:
+            break
+    return g, CliqueReports(segments)

@@ -26,14 +26,29 @@ def x_prune_roots(adj: Sequence[Set[int]], order: np.ndarray,
     ignore_id = np.full(n, n, dtype=np.int64)
     ignore_wit = np.full(n, -1, dtype=np.int64)
     kept: List[Set[int]] = []
+    # N⁺(u) depends on u alone; memoize it instead of rebuilding the set for
+    # every (root, u) incidence (that rebuild was O(Σ_v Σ_{u∈P(v)} deg(u)),
+    # the dominant term of host prep on hub-heavy graphs)
+    nup_cache: Dict[int, Set[int]] = {}
+
+    def nu_plus_of(u: int) -> Set[int]:
+        s = nup_cache.get(u)
+        if s is None:
+            ru = rank[u]
+            s = {w for w in adj[u] if rank[w] > ru}
+            nup_cache[u] = s
+        return s
 
     for i in range(n):
         v = int(order[i])
+        if not adj[v]:
+            kept.append(set())
+            continue
         P = {u for u in adj[v] if rank[u] > i}
         X_full = {u for u in adj[v] if rank[u] < i}
         kept.append(resolve_keeps(X_full, i, ignore_id, ignore_wit, rank))
         for u in P:
-            nu_plus = {w for w in adj[u] if rank[w] > rank[u]}
+            nu_plus = nu_plus_of(u)
             if (P - {u}) <= nu_plus:
                 if rank[u] < ignore_id[v]:
                     ignore_id[v] = rank[u]

@@ -32,21 +32,19 @@ def degeneracy_order(g: CSRGraph) -> Tuple[np.ndarray, np.ndarray, int]:
         return z, z, 0
     deg = g.degrees().astype(np.int64).copy()
     max_deg = int(deg.max())
-    # counting sort of vertices by degree
+    # counting sort of vertices by degree — a stable argsort fills the
+    # degree buckets in increasing-vertex order, exactly like the classic
+    # per-vertex insertion loop but vectorized
     bin_start = np.zeros(max_deg + 2, dtype=np.int64)
     np.add.at(bin_start, deg + 1, 1)
     bin_start = np.cumsum(bin_start)
-    bin_cur = bin_start[:-1].copy()        # per-degree insertion/front cursor
-    vert = np.empty(n, dtype=np.int64)
+    vert = np.argsort(deg, kind="stable")
     pos = np.empty(n, dtype=np.int64)
-    for v in range(n):
-        p = bin_cur[deg[v]]
-        vert[p] = v
-        pos[v] = p
-        bin_cur[deg[v]] += 1
+    pos[vert] = np.arange(n)
     bin_ = bin_start[:-1].copy()           # bucket front pointers
 
-    dptr, dind = g.indptr, g.indices
+    dptr = g.indptr.tolist()
+    dind = g.indices.tolist()
     degeneracy = 0
     deg_list = deg.tolist()
     pos_list = pos.tolist()
@@ -57,7 +55,7 @@ def degeneracy_order(g: CSRGraph) -> Tuple[np.ndarray, np.ndarray, int]:
         dv = deg_list[v]
         if dv > degeneracy:
             degeneracy = dv
-        for u in dind[dptr[v]:dptr[v + 1]].tolist():
+        for u in dind[dptr[v]:dptr[v + 1]]:
             du = deg_list[u]
             if du > dv:
                 pu = pos_list[u]

@@ -64,6 +64,12 @@ def main() -> None:
     ap.add_argument("--no-global-red", dest="gred", action="store_false")
     ap.add_argument("--no-dynamic-red", dest="dred", action="store_false")
     ap.add_argument("--no-x-red", dest="xred", action="store_false")
+    ap.add_argument("--materialize", action="store_true",
+                    help="legacy mode: pack every bucket before device step 1")
+    ap.add_argument("--stream-roots", type=int, default=1024,
+                    help="streamed bucket flush size (part of the elastic "
+                         "schedule identity — keep it fixed across restarts)")
+    ap.add_argument("--split-threshold", type=int, default=None)
     args = ap.parse_args()
 
     g = parse_graph(args.graph)
@@ -72,16 +78,26 @@ def main() -> None:
     drv = DistributedMCE(
         g, chunk=args.chunk, ckpt_path=args.ckpt,
         cfg=EngineConfig(dynamic_red=args.dred, backend=args.backend),
-        global_red=args.gred, x_red=args.xred)
-    prep_s = time.time() - t0
+        global_red=args.gred, x_red=args.xred,
+        streaming=not args.materialize, stream_roots=args.stream_roots,
+        split_threshold=args.split_threshold)
+    init_s = time.time() - t0
     t0 = time.time()
     res = drv.run(resume=args.resume)
     run_s = time.time() - t0
     print(f"maximal cliques: {res.cliques} "
           f"(pre-reported {res.pre_reported}, calls {res.calls}, "
           f"branches {res.branches})")
-    print(f"prep {prep_s:.2f}s  run {run_s:.2f}s  "
-          f"shards={drv.n_shards} buckets={len(drv.prep.buckets)}")
+    tm = drv.stream.timings if drv.stream is not None else {}
+    stage_str = " ".join(f"{k} {v:.2f}s" for k, v in tm.items())
+    n_buckets = (drv.stream.num_buckets if drv.stream is not None
+                 else len(drv.prep.buckets))
+    print(f"prep stages: {stage_str or f'(materialized in {init_s:.2f}s)'}")
+    print(f"run {run_s:.2f}s  shards={drv.n_shards} buckets={n_buckets} "
+          f"chunks={drv.stats['chunks']}  "
+          f"device_wait {drv.stats['device_wait_s']:.2f}s  "
+          f"host_pack {drv.stats['host_pack_s']:.2f}s "
+          f"(overlapped {100 * drv.overlap_fraction:.0f}%)")
 
 
 if __name__ == "__main__":

@@ -57,9 +57,53 @@ def test_lint_catches_the_original_bug():
 
 def test_engine_package_layout():
     pkg = os.path.join(SRC, "core", "engine")
-    for mod in ("__init__.py", "prepare.py", "frames.py", "reductions.py",
-                "pivot.py", "loop.py"):
+    for mod in ("__init__.py", "prepare.py", "pipeline.py", "frames.py",
+                "reductions.py", "pivot.py", "loop.py"):
         assert os.path.isfile(os.path.join(pkg, mod)), f"missing engine/{mod}"
+    assert os.path.isfile(os.path.join(SRC, "graph", "pack.py")), \
+        "vectorized packer must live in the graph layer"
+
+
+def _imports_of(path):
+    with open(path) as f:
+        text = f.read()
+    return re.findall(r"^\s*(?:from|import)\s+(repro\.[\w.]+)", text,
+                      flags=re.M)
+
+
+def test_ingest_pipeline_layering():
+    """Ingest layers import strictly downward (DESIGN.md §6).
+
+    graph/  -> numpy + graph siblings only (no core, kernels, launch);
+    core/engine/ -> never the driver or launch (the driver consumes the
+    stream, not the other way around);
+    core/driver.py -> never launch.
+    """
+    graph_dir = os.path.join(SRC, "graph")
+    for name in os.listdir(graph_dir):
+        if not name.endswith(".py"):
+            continue
+        for imp in _imports_of(os.path.join(graph_dir, name)):
+            assert imp.startswith("repro.graph"), \
+                f"graph/{name} imports upward: {imp}"
+    eng_dir = os.path.join(SRC, "core", "engine")
+    for name in os.listdir(eng_dir):
+        if not name.endswith(".py"):
+            continue
+        for imp in _imports_of(os.path.join(eng_dir, name)):
+            assert not imp.startswith(("repro.core.driver", "repro.launch")), \
+                f"engine/{name} imports upward: {imp}"
+    for imp in _imports_of(os.path.join(SRC, "core", "driver.py")):
+        assert not imp.startswith("repro.launch"), \
+            f"driver imports upward: {imp}"
+
+
+def test_prepare_is_a_thin_wrapper_over_the_pipeline():
+    """Staging/packing code belongs in pipeline.py + graph/pack.py."""
+    with open(os.path.join(SRC, "core", "engine", "prepare.py")) as f:
+        text = f.read()
+    assert "PrepStream" in text, "prepare() must delegate to the pipeline"
+    assert "np.isin" not in text, "per-row isin packing must stay dead"
 
 
 def test_bitset_engine_is_a_thin_shim():

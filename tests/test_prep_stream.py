@@ -1,0 +1,317 @@
+"""Streaming ingest pipeline (DESIGN.md §6): parity, auto-split, elasticity.
+
+The contract under test: a streamed run — buckets packed incrementally,
+chunks double-buffered — produces bit-identical clique/call/branch
+counters to the materialized path, survives elastic restarts mid-stream
+with a different shard count, and auto-splits roots the legacy prepare()
+rejected.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import bitset_engine, oracle
+from repro.core.driver import DistributedMCE, estimate_costs
+from repro.core.engine import PrepStream
+from repro.core.global_reduction import (_peel_rounds_np, global_reduce_jnp,
+                                         peel_low_degree)
+from repro.graph import barabasi_albert, caveman, erdos_renyi
+from repro.graph.pack import pack_bucket, popcount_sum
+from test_distributed import run_py
+
+STREAM_GRAPHS = [
+    ("er", lambda: erdos_renyi(150, 0.12, seed=1)),
+    ("ba", lambda: barabasi_albert(300, 6, seed=2)),
+    ("caveman", lambda: caveman(20, 6, 0.15, seed=3)),
+]
+
+
+# ---------------------------------------------------------------------------
+# Streamed vs materialized parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,make", STREAM_GRAPHS,
+                         ids=[g[0] for g in STREAM_GRAPHS])
+def test_streamed_counters_match_materialized(name, make):
+    """Bit-identical counters: streamed driver vs single-host engine."""
+    g = make()
+    ref = bitset_engine.run(g, bucket_sizes=(32, 64))
+    drv = DistributedMCE(g, chunk=16, bucket_sizes=(32, 64),
+                         streaming=True, stream_roots=24)
+    res = drv.run()
+    assert res.cliques == ref.cliques
+    assert res.calls == ref.calls
+    assert res.branches == ref.branches
+
+
+def test_streaming_vs_materialized_driver_modes():
+    g = barabasi_albert(250, 5, seed=4)
+    a = DistributedMCE(g, chunk=32, bucket_sizes=(32, 64),
+                       streaming=True, stream_roots=16).run()
+    b = DistributedMCE(g, chunk=32, bucket_sizes=(32, 64),
+                       streaming=False).run()
+    assert (a.cliques, a.calls, a.branches) == (b.cliques, b.calls, b.branches)
+
+
+def test_stream_flush_composition_is_shard_count_free():
+    """Bucket sequence depends on stream_roots, never on devices/chunks."""
+    g = erdos_renyi(120, 0.1, seed=5)
+    seqs = []
+    for chunk in (8, 64):
+        s = PrepStream(g, bucket_sizes=(32, 64), stream_roots=16)
+        DistributedMCE(g=None, prep=s, chunk=chunk).run()
+        seqs.append([(b.u_pad, b.num_roots) for b in s._cached])
+    assert seqs[0] == seqs[1]
+
+
+# ---------------------------------------------------------------------------
+# Vectorized packer vs a naive reference
+# ---------------------------------------------------------------------------
+
+def test_pack_bucket_matches_naive_reference():
+    g = erdos_renyi(60, 0.3, seed=12)
+    prep = bitset_engine.prepare(g, bucket_sizes=(32, 64))
+    adj = [set(g.neighbors(v).tolist()) for v in range(g.n)]
+    for bk in prep.buckets:
+        words = bk.u_pad // 32
+        for r in range(bk.num_roots):
+            uni = bk.universes[r]
+            for j, u in enumerate(uni):
+                row = np.zeros(words, np.uint32)
+                for k, w in enumerate(uni):
+                    if int(w) in adj[int(u)]:
+                        row[k // 32] |= np.uint32(1) << np.uint32(k % 32)
+                assert np.array_equal(bk.a[r, j], row), (bk.u_pad, r, j)
+            # p0 = first |P| bits
+            expect_p0 = np.zeros(words, np.uint32)
+            for k in range(len(uni)):
+                expect_p0[k // 32] |= np.uint32(1) << np.uint32(k % 32)
+            assert np.array_equal(bk.p0[r], expect_p0)
+            # X rows: alive rows are nonzero, dead rows zero
+            alive = bk.x_alive0[r]
+            assert bk.x_rows[r][alive].any(axis=1).all()
+            assert not bk.x_rows[r][~alive].any()
+
+
+def test_pack_bucket_empty_x_and_shapes():
+    indptr = np.array([0, 1, 2], np.int64)
+    indices = np.array([1, 0], np.int32)
+    a, p0, xr, xa = pack_bucket(indptr, indices, 2,
+                                [np.array([1], np.int64)], [np.array([], np.int64)], 32)
+    assert a.shape == (1, 32, 1) and p0.shape == (1, 1)
+    assert xr.shape == (1, 1, 1) and not xa.any()
+    assert p0[0, 0] == 1
+
+
+# ---------------------------------------------------------------------------
+# estimate_costs LUT regression (satellite)
+# ---------------------------------------------------------------------------
+
+def test_estimate_costs_lut_matches_unpackbits():
+    g = erdos_renyi(200, 0.15, seed=2)
+    prep = bitset_engine.prepare(g, bucket_sizes=(64,))
+    bucket = prep.buckets[0]
+    p_sizes = np.array([len(u) for u in bucket.universes], dtype=np.float64)
+    pc_ref = np.unpackbits(bucket.a.view(np.uint8), axis=-1).sum(axis=(1, 2))
+    ref = p_sizes * (1.0 + pc_ref / np.maximum(p_sizes, 1)) ** 2
+    got = estimate_costs(bucket)
+    assert np.allclose(got, ref)
+    assert np.array_equal(np.argsort(-got, kind="stable"),
+                          np.argsort(-ref, kind="stable"))
+
+
+def test_popcount_sum_lut():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 32, size=(5, 7, 3), dtype=np.uint64).astype(np.uint32)
+    ref = np.unpackbits(a.view(np.uint8), axis=-1).sum(axis=(1, 2))
+    assert np.array_equal(popcount_sum(a, axis=(1, 2)), ref)
+    assert popcount_sum(a) == ref.sum()
+
+
+# ---------------------------------------------------------------------------
+# Auto-split (satellite): oversized roots and X caps never raise
+# ---------------------------------------------------------------------------
+
+def test_auto_split_root_larger_than_biggest_bucket():
+    """caveman cliques of 40 > bucket 32: legacy prepare() raised here."""
+    g = caveman(3, 40, 0.05, seed=1)
+    ref = set(oracle.bk_pivot(g))
+    res = bitset_engine.run(g, enumerate_cliques=True, out_cap=1 << 15,
+                            bucket_sizes=(32,))
+    assert res.cliques == len(ref)
+    assert set(res.enumerated) == ref
+
+
+def test_auto_split_x_rows_cap():
+    g = erdos_renyi(70, 0.3, seed=6)
+    ref = set(oracle.bk_pivot(g))
+    res = bitset_engine.run(g, enumerate_cliques=True, out_cap=1 << 15,
+                            bucket_sizes=(32, 64), max_x_rows=2)
+    assert res.cliques == len(ref)
+    assert set(res.enumerated) == ref
+
+
+def test_auto_split_through_streamed_driver():
+    g = caveman(3, 40, 0.05, seed=2)
+    ref = bitset_engine.run(g, bucket_sizes=(32, 64))
+    drv = DistributedMCE(g, chunk=8, bucket_sizes=(32,), stream_roots=4)
+    res = drv.run()
+    assert res.cliques == ref.cliques
+
+
+# ---------------------------------------------------------------------------
+# Device peel pre-pass (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_peel_np_matches_jnp(seed):
+    import jax.numpy as jnp
+
+    g = erdos_renyi(80, 0.035, seed=seed)   # sparse: real deg-0/1 fringe
+    if g.m == 0:
+        return
+    ei = g.edge_index()
+    av_dev, _ = global_reduce_jnp(jnp.asarray(ei[0]), jnp.asarray(ei[1]), g.n)
+    assert np.array_equal(_peel_rounds_np(g), np.asarray(av_dev))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_peel_low_degree_device_host_agree(seed):
+    g = erdos_renyi(90, 0.03, seed=seed)
+    r_host, rep_host = peel_low_degree(g, use_device=False)
+    r_dev, rep_dev = peel_low_degree(g, use_device=True)
+    assert r_host.m == r_dev.m
+    assert set(rep_host) == set(rep_dev)
+    assert len(rep_host) == len(set(rep_host)), "peel must not double-report"
+
+
+# ---------------------------------------------------------------------------
+# Elastic restart mid-stream with a different shard count
+# ---------------------------------------------------------------------------
+
+def test_elastic_restart_mid_stream_different_shard_count(tmp_path):
+    """Checkpoint written mid-stream under 8 shards, resumed under 4."""
+    ck = str(tmp_path / "elastic_stream.json")
+    out8 = run_py(f"""
+        from repro.core.driver import DistributedMCE
+        from repro.graph import barabasi_albert
+        g = barabasi_albert(400, 6, seed=9)
+        drv = DistributedMCE(g, chunk=8, ckpt_path={ck!r},
+                             bucket_sizes=(32, 64), stream_roots=32)
+        n = 0
+        orig = drv._run_chunk
+        def failing(*args):
+            global n
+            if n >= 3: raise RuntimeError("preempted")
+            n += 1
+            return orig(*args)
+        drv._run_chunk = failing
+        try:
+            drv.run()
+        except RuntimeError:
+            pass
+        import os
+        assert os.path.exists({ck!r})
+        print("PARTIAL_OK")
+    """, devices=8)
+    assert "PARTIAL_OK" in out8
+    out4 = run_py(f"""
+        from repro.core.driver import DistributedMCE
+        from repro.core import bitset_engine
+        from repro.graph import barabasi_albert
+        g = barabasi_albert(400, 6, seed=9)
+        ref = bitset_engine.run(g, bucket_sizes=(32, 64))
+        drv = DistributedMCE(g, chunk=8, ckpt_path={ck!r},
+                             bucket_sizes=(32, 64), stream_roots=32)
+        res = drv.run(resume=True)
+        print("CLIQUES", res.cliques, ref.cliques)
+        assert res.cliques == ref.cliques
+        assert res.calls == ref.calls
+    """, devices=4)
+    assert "CLIQUES" in out4
+
+
+# ---------------------------------------------------------------------------
+# Prepared-stream reuse (launch.mce_service)
+# ---------------------------------------------------------------------------
+
+def test_stream_cache_reuse_across_queries():
+    from repro.core.engine import EngineConfig
+    from repro.launch.mce_service import MCEService
+
+    g = barabasi_albert(200, 5, seed=7)
+    ref = bitset_engine.run(g)
+    svc = MCEService(g, chunk=64, stream_roots=16)
+    r1 = svc.query(EngineConfig())
+    assert svc.stream._cached is not None, "first pass must populate cache"
+    n_buckets = svc.stream.num_buckets
+    r2 = svc.query(EngineConfig())
+    assert (r1.cliques, r1.calls) == (r2.cliques, r2.calls)
+    assert r1.cliques == ref.cliques
+    assert svc.stream.num_buckets == n_buckets
+    # warm queries must reuse the memoized canonical order, not rescan
+    assert all(b.cost_order is not None for b in svc.stream._cached)
+
+
+def test_resume_refuses_schedule_mismatch(tmp_path):
+    """The cursor is only meaningful against the same bucket sequence."""
+    g = barabasi_albert(200, 5, seed=11)
+    ck = str(tmp_path / "sched.json")
+    DistributedMCE(g, chunk=32, bucket_sizes=(32, 64), stream_roots=16,
+                   ckpt_path=ck).run()
+    with pytest.raises(ValueError, match="schedule mismatch"):
+        DistributedMCE(g, chunk=32, bucket_sizes=(32, 64), stream_roots=8,
+                       ckpt_path=ck).run(resume=True)
+    with pytest.raises(ValueError, match="schedule mismatch"):
+        DistributedMCE(g, chunk=32, bucket_sizes=(32, 64), streaming=False,
+                       ckpt_path=ck).run(resume=True)
+    # same parameters but a DIFFERENT graph: the cursor is meaningless
+    g2 = barabasi_albert(210, 5, seed=12)
+    with pytest.raises(ValueError, match="schedule mismatch"):
+        DistributedMCE(g2, chunk=32, bucket_sizes=(32, 64), stream_roots=16,
+                       ckpt_path=ck).run(resume=True)
+    # same schedule, different chunking: fine (elastic dimension)
+    res = DistributedMCE(g, chunk=8, bucket_sizes=(32, 64), stream_roots=16,
+                         ckpt_path=ck).run(resume=True)
+    assert res.cliques == bitset_engine.run(g, bucket_sizes=(32, 64)).cliques
+
+
+def test_prep_and_graph_conflict_rejected():
+    g = erdos_renyi(50, 0.1, seed=1)
+    s = PrepStream(g, bucket_sizes=(32, 64))
+    with pytest.raises(ValueError, match="not both"):
+        DistributedMCE(g, prep=s)
+
+
+def test_driver_owned_stream_does_not_cache():
+    g = erdos_renyi(120, 0.1, seed=10)
+    drv = DistributedMCE(g, chunk=32, bucket_sizes=(32, 64), stream_roots=8)
+    drv.run()
+    assert drv.stream._cached is None, \
+        "one-shot streaming must not retain every packed bucket"
+
+
+def test_clique_reports_sequence_contract():
+    from repro.core.global_reduction import CliqueReports
+
+    r = CliqueReports([np.array([[0, 1], [2, 3]], np.int64),
+                       [frozenset((4, 5))]])
+    assert len(r) == 3
+    assert list(r) == [frozenset((0, 1)), frozenset((2, 3)),
+                       frozenset((4, 5))]
+    assert r[-1] == frozenset((4, 5)) and r[0] == frozenset((0, 1))
+    for bad in (3, -4):
+        with pytest.raises(IndexError):
+            r[bad]
+    assert ([frozenset((9, 9))] + r)[0] == frozenset((9, 9))
+    assert len(r + r) == 6
+
+
+def test_stream_timings_populated():
+    g = erdos_renyi(100, 0.1, seed=8)
+    s = PrepStream(g, bucket_sizes=(32, 64), stream_roots=8)
+    list(s)
+    assert set(s.timings) == {"reduce", "order", "stage", "pack"}
+    assert all(v >= 0 for v in s.timings.values())
+    assert s.timings["pack"] > 0
