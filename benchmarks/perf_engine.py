@@ -1,0 +1,161 @@
+"""Persistent lane-refill engine vs lock-step vmap on a skewed-root workload.
+
+The lock-step comparator mirrors the driver's per-root path: cost-descending
+chunks of `chunk` roots, one vmapped `run_bucket` per chunk — every lane in
+a chunk spins (masked) until the chunk's slowest root finishes, so one
+unsplit hub root stalls its whole chunk. The persistent engine walks the
+same cost-descending queue with `lanes` resident DFS states; a lane whose
+subtree exhausts claims the next root on device, so the hub monopolizes one
+lane while the rest drain the queue.
+
+Workload: a sparse BA graph with one planted dense blob (`--blob`,
+`--blob-p`) packed into a SINGLE bucket size, so the hub root and the tail
+share one queue. `split_threshold` is intentionally unset: the hub staying
+unsplit is the lock-step worst case this engine exists for.
+
+Emits BENCH_engine.json:
+  {graph, n, m, roots, iters_total, iters_hub,
+   lockstep_s, persistent_s, speedup,
+   lockstep_occupancy, persistent_occupancy, lanes, chunk}
+
+  PYTHONPATH=src python -m benchmarks.perf_engine --out BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def skewed_graph(n: int, m: int, blob: int, blob_p: float, seed: int = 7):
+    from repro.graph import generators as gen
+    from repro.graph.csr import from_edge_list
+
+    g = gen.barabasi_albert(n, m, seed=seed)
+    rng = np.random.default_rng(seed)
+    extra = [(i, j) for i in range(blob) for j in range(i + 1, blob)
+             if rng.random() < blob_p]
+    e = np.concatenate([g.edges().astype(np.int64),
+                        np.array(extra, np.int64)])
+    key = e[:, 0] * n + e[:, 1]
+    e = e[np.unique(key, return_index=True)[1]]
+    return from_edge_list(n, e)
+
+
+def run(n: int = 4000, m: int = 8, blob: int = 40, blob_p: float = 0.6,
+        bucket: int = 64, chunk: int = 256, lanes: int = 16,
+        out_json: str | None = "BENCH_engine.json"):
+    from repro.core.driver import canonical_order, estimate_costs
+    from repro.core.engine import (EngineConfig, prepare, run_bucket,
+                                   run_bucket_persistent)
+
+    g = skewed_graph(n, m, blob, blob_p)
+    print(f"graph ba:n={n},m={m} + blob({blob},p={blob_p}): "
+          f"n={g.n} m={g.m}", flush=True)
+    prep = prepare(g, bucket_sizes=(bucket,))
+    (bk,) = prep.buckets
+    order = canonical_order(estimate_costs(bk))
+    R = bk.num_roots
+    cfg = EngineConfig()
+    arrs = (bk.a[order], bk.p0[order], bk.x_rows[order],
+            bk.x_alive0[order], bk.rsz0[order])
+
+    # ---- lock-step comparator: cost-desc chunks, pad the last chunk ------
+    def chunk_args(lo: int):
+        hi = min(lo + chunk, R)
+        pad = chunk - (hi - lo)
+        parts = []
+        for arr in arrs:
+            sl = arr[lo:hi]
+            if pad:
+                fill = np.ones(pad, np.int32) if arr is arrs[-1] else \
+                    np.zeros((pad,) + arr.shape[1:], arr.dtype)
+                sl = np.concatenate([sl, fill])
+            parts.append(jnp.asarray(sl))
+        return parts, pad
+
+    def lockstep():
+        tot = {k: 0 for k in ("cliques", "calls", "branches", "sum_px")}
+        live = spin = 0
+        for lo in range(0, R, chunk):
+            parts, pad = chunk_args(lo)
+            out = run_bucket(*parts, cfg)
+            iters = np.asarray(out["iters"])
+            live += int(iters.sum())
+            spin += chunk * int(iters.max())
+            for k in tot:
+                tot[k] += int(np.asarray(out[k]).sum())
+            tot["calls"] -= pad        # empty pad roots: one call each
+        return tot, live, spin
+
+    def persistent():
+        out = run_bucket_persistent(*(jnp.asarray(x) for x in arrs), cfg,
+                                    lanes=lanes)
+        tot = {k: int(np.asarray(out[k]).sum())
+               for k in ("cliques", "calls", "branches", "sum_px")}
+        live = int(out["live_iters"])
+        spin = lanes * int(out["iters"])
+        return tot, live, spin
+
+    # warmup compiles both paths; second pass measures steady state
+    t_lock, t_pers = [], []
+    for it in range(2):
+        t0 = time.perf_counter()
+        lock_tot, lock_live, lock_spin = lockstep()
+        t_lock.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        pers_tot, pers_live, pers_spin = persistent()
+        t_pers.append(time.perf_counter() - t0)
+        assert lock_tot == pers_tot, (lock_tot, pers_tot)
+
+    # per-root iteration profile (skew evidence)
+    iters = []
+    for lo in range(0, R, chunk):
+        parts, pad = chunk_args(lo)
+        out = run_bucket(*parts, cfg)
+        it_arr = np.asarray(out["iters"])
+        iters.append(it_arr[:chunk - pad] if pad else it_arr)
+    iters = np.concatenate(iters)
+
+    lock_occ = lock_live / lock_spin
+    pers_occ = pers_live / pers_spin
+    speedup = t_lock[-1] / t_pers[-1]
+    row = dict(graph=f"ba:n={n},m={m}+blob({blob},p={blob_p})",
+               n=g.n, m=g.m, roots=R, bucket=bucket,
+               chunk=chunk, lanes=lanes,
+               iters_total=int(iters.sum()), iters_hub=int(iters.max()),
+               lockstep_s=t_lock[-1], persistent_s=t_pers[-1],
+               speedup=speedup,
+               lockstep_occupancy=lock_occ,
+               persistent_occupancy=pers_occ,
+               cliques=lock_tot["cliques"])
+    print(f"roots={R} iters: total={row['iters_total']} "
+          f"hub={row['iters_hub']} "
+          f"(hub is {row['iters_hub'] / row['iters_total']:.0%} of all work)",
+          flush=True)
+    print(f"lock-step  : {t_lock[-1]:.2f}s occupancy={lock_occ:.2f} "
+          f"(chunk={chunk})", flush=True)
+    print(f"persistent : {t_pers[-1]:.2f}s occupancy={pers_occ:.2f} "
+          f"(lanes={lanes})", flush=True)
+    print(f"speedup: {speedup:.2f}x", flush=True)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--blob", type=int, default=40)
+    ap.add_argument("--blob-p", type=float, default=0.6)
+    ap.add_argument("--bucket", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=256)
+    ap.add_argument("--lanes", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    a = ap.parse_args()
+    run(a.n, a.m, a.blob, a.blob_p, a.bucket, a.chunk, a.lanes, a.out)

@@ -40,12 +40,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import (EngineConfig, MCEResult, PreparedMCE,
-                               PrepStream, RootBucket, run_root)
+                               PrepStream, RootBucket,
+                               run_bucket_persistent, run_root)
 from repro.graph.csr import CSRGraph
 from repro.graph.pack import popcount_sum
 from repro.sharding.compat import shard_map
 
-COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px")
+# "truncated" folds each chunk's iters-exhausted flags so a max_iters cutoff
+# surfaces as MCEResult.iters_exhausted instead of silently partial counts
+COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px", "truncated")
 
 
 # ---------------------------------------------------------------------------
@@ -117,17 +120,26 @@ def _shard_batch(bucket: RootBucket, idx: np.ndarray, pad_to: int):
 
 
 def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
-                         axis):
+                         axis, engine: str = "perroot", lanes: int = 64):
     """Run a [n_shards, chunk, ...] batch under shard_map; psum counters.
 
     `axis` is a mesh axis name or a tuple of axis names (multi-pod: roots
-    shard over the flattened ("pod", "data") product)."""
+    shard over the flattened ("pod", "data") product). `engine='persistent'`
+    runs each shard's chunk through the lane-refill work queue — the
+    chunk's cost-descending slice order IS the queue order — instead of
+    one lock-step vmap lane per root."""
 
     def per_shard(a_s, p_s, xr_s, xa_s, rz_s):
-        out = jax.vmap(lambda aa, pp, rr, ll, zz: run_root(aa, pp, rr, ll,
-                                                           zz, cfg))(
-            a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0])
-        sums = {k: jnp.sum(out[k]).astype(jnp.int32)[None] for k in COUNTER_KEYS}
+        if engine == "persistent":
+            out = run_bucket_persistent(
+                a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0], cfg,
+                lanes=min(lanes, a_s.shape[1]))
+        else:
+            out = jax.vmap(lambda aa, pp, rr, ll, zz: run_root(
+                aa, pp, rr, ll, zz, cfg))(
+                a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0])
+        sums = {k: jnp.sum(out[k]).astype(jnp.int32)[None]
+                for k in COUNTER_KEYS}
         return sums
 
     specs_in = (P(axis), P(axis), P(axis), P(axis), P(axis))
@@ -146,18 +158,22 @@ def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
 # jax.distributed.initialize() after importing this module) — so the
 # variant is chosen lazily at the first call.
 _sharded_counts_donated = partial(jax.jit,
-                                  static_argnames=("cfg", "mesh", "axis"),
+                                  static_argnames=("cfg", "mesh", "axis",
+                                                   "engine", "lanes"),
                                   donate_argnums=(0, 1, 2, 3, 4))(
     _sharded_counts_impl)
 _sharded_counts_plain = partial(jax.jit,
-                                static_argnames=("cfg", "mesh", "axis"))(
+                                static_argnames=("cfg", "mesh", "axis",
+                                                 "engine", "lanes"))(
     _sharded_counts_impl)
 
 
-def _sharded_counts(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh, axis):
+def _sharded_counts(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh, axis,
+                    engine: str = "perroot", lanes: int = 64):
     fn = (_sharded_counts_plain if jax.default_backend() == "cpu"
           else _sharded_counts_donated)
-    return fn(a, p0, xr, xa, rz, cfg=cfg, mesh=mesh, axis=axis)
+    return fn(a, p0, xr, xa, rz, cfg=cfg, mesh=mesh, axis=axis,
+              engine=engine, lanes=lanes)
 
 
 @dataclasses.dataclass
@@ -207,7 +223,12 @@ class DistributedMCE:
                  max_x_rows: int = 8192,
                  split_threshold: Optional[int] = None,
                  streaming: bool = True, stream_roots: int = 1024,
-                 prep: Union[PrepStream, PreparedMCE, None] = None):
+                 prep: Union[PrepStream, PreparedMCE, None] = None,
+                 engine: str = "perroot", lanes: int = 64):
+        if engine not in ("perroot", "persistent"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
+        self.lanes = lanes
         if mesh is None:
             # no axis_types kwarg: Auto is the default and the kwarg does
             # not exist on jax 0.4.x
@@ -304,9 +325,12 @@ class DistributedMCE:
             b += 1
             if b < state.bucket:
                 continue                    # resume: replayed, not re-run
-            total = bucket.num_roots
+            # pad roots (remainder-flush pow2 padding) sit at the bucket's
+            # tail; scheduling only the real prefix drops their no-op calls
+            total = bucket.num_roots - bucket.n_pad
             if bucket.cost_order is None:   # memo: cached-bucket replays
-                bucket.cost_order = canonical_order(estimate_costs(bucket))
+                costs = estimate_costs(bucket)[:total]
+                bucket.cost_order = canonical_order(costs)
             order = bucket.cost_order
             done = state.roots_done if b == state.bucket else 0
             while done < total:
@@ -329,7 +353,8 @@ class DistributedMCE:
                          calls=state.counters["calls"],
                          branches=state.counters["branches"],
                          sum_px=state.counters["sum_px"],
-                         pre_reported=pre0 + late)
+                         pre_reported=pre0 + late,
+                         iters_exhausted=state.counters.get("truncated", 0) > 0)
 
     # ---- chunk pipeline --------------------------------------------------
 
@@ -347,7 +372,7 @@ class DistributedMCE:
         sharding = NamedSharding(self.mesh, P(self.axis))
         a, p0, xr, xa, rz = (jax.device_put(t, sharding) for t in stacked)
         out = _sharded_counts(a, p0, xr, xa, rz, self.cfg, self.mesh,
-                              self.axis)
+                              self.axis, engine=self.engine, lanes=self.lanes)
         return out, n_pad
 
     def _settle(self, pending, state: DriverCheckpoint) -> None:
@@ -369,7 +394,9 @@ class DistributedMCE:
         # distributed counters match the single-host run bit-for-bit
         out["calls"] = out["calls"] - n_pad
         for k in COUNTER_KEYS:
-            state.counters[k] += int(out[k])
+            # .get: checkpoints written before a counter key existed resume
+            # cleanly (the missing key starts from zero)
+            state.counters[k] = state.counters.get(k, 0) + int(out[k])
         state.bucket, state.roots_done = b, hi
         if self.ckpt_path:
             state.save(self.ckpt_path)

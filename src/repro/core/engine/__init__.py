@@ -17,8 +17,9 @@ All bitset set algebra dispatches through `repro.kernels.bitset_ops.ops`
 thin re-export shim for existing callers.
 """
 from repro.core.engine.frames import EngineConfig, Frame, FrameStack  # noqa: F401
-from repro.core.engine.loop import (MCEResult, enter_call, run,  # noqa: F401
-                                    run_bucket, run_root)
+from repro.core.engine.loop import (MCEResult, dfs_step,  # noqa: F401
+                                    enter_call, run, run_bucket,
+                                    run_bucket_persistent, run_root)
 from repro.core.engine.pipeline import PrepStream, RootSpec  # noqa: F401
 from repro.core.engine.prepare import (PreparedMCE, RootBucket,  # noqa: F401
                                        prepare)

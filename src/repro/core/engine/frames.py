@@ -189,9 +189,9 @@ class FrameStack(NamedTuple):
 # Counter/enumeration carry
 # ===========================================================================
 
-def carry_init(cfg: EngineConfig, words: int):
+def carry_init(cfg: EngineConfig, words: int, track_root: bool = False):
     cap = max(cfg.out_cap, 1)
-    return dict(
+    carry = dict(
         cliques=jnp.int32(0),
         calls=jnp.int32(0),
         branches=jnp.int32(0),
@@ -201,6 +201,13 @@ def carry_init(cfg: EngineConfig, words: int):
         out_n=jnp.int32(0),
         overflow=jnp.bool_(False),
     )
+    if track_root and cfg.out_cap:
+        # persistent lanes interleave roots, so every enumerated clique
+        # records which queue slot produced it (per-root decode needs the
+        # root's universe/base); `cur_root` is updated on each lane refill
+        carry["cur_root"] = jnp.int32(0)
+        carry["out_root"] = jnp.zeros((cap,), dtype=jnp.int32)
+    return carry
 
 
 def report_single(carry, cfg, bits, size, enable):
@@ -211,6 +218,9 @@ def report_single(carry, cfg, bits, size, enable):
         pos = jnp.where(enable & (carry["out_n"] < cap), carry["out_n"], cap)
         carry["out_rows"] = carry["out_rows"].at[pos].set(bits, mode="drop")
         carry["out_sizes"] = carry["out_sizes"].at[pos].set(size, mode="drop")
+        if "out_root" in carry:
+            carry["out_root"] = carry["out_root"].at[pos].set(
+                carry["cur_root"], mode="drop")
         carry["overflow"] = carry["overflow"] | (enable & (carry["out_n"] >= cap))
         carry["out_n"] = jnp.minimum(carry["out_n"] + cnt, cap)
     return carry
@@ -225,6 +235,9 @@ def report_multi(carry, cfg, rows, sizes, mask):
         pos = jnp.where(mask & (offs < cap), offs, cap)
         carry["out_rows"] = carry["out_rows"].at[pos].set(rows, mode="drop")
         carry["out_sizes"] = carry["out_sizes"].at[pos].set(sizes, mode="drop")
+        if "out_root" in carry:
+            carry["out_root"] = carry["out_root"].at[pos].set(
+                carry["cur_root"], mode="drop")
         carry["overflow"] = carry["overflow"] | jnp.any(mask & (offs >= cap))
         carry["out_n"] = jnp.minimum(carry["out_n"] + cnt, cap)
     return carry

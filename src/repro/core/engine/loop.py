@@ -21,6 +21,7 @@ from repro.core.engine import reductions as red
 from repro.core.engine.frames import U32, WORD, EngineConfig, Frame, FrameStack
 from repro.core.engine.prepare import _unpack_bits_np, prepare
 from repro.graph.csr import CSRGraph
+from repro.kernels.bitset_ops import ops as bitops
 
 
 # ===========================================================================
@@ -28,12 +29,17 @@ from repro.graph.csr import CSRGraph
 # ===========================================================================
 
 def enter_call(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
-               enable=None):
+               enable=None, pre=None):
     """BK call entry for (R, P, X). Returns (carry, push?, Frame).
 
     `enable` gates every carry side-effect (counter bumps, clique reports):
     the DFS body runs enter_call unconditionally (straight-line, no
-    lax.cond — see run_root) and masks it out on pop-only iterations."""
+    lax.cond — see run_root) and masks it out on pop-only iterations.
+
+    `pre` is the fused frame-step kernel's (deg, partner) pair over this
+    call's P — the DFS body computes it while constructing the child sets,
+    so dynamic reduction (and pivot scoring when reduction is off) reuses
+    it instead of re-sweeping A."""
     XC = ctx.xc
     enable = jnp.bool_(True) if enable is None else enable
     en_i = enable.astype(jnp.int32)
@@ -44,7 +50,7 @@ def enter_call(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
     # ---- dynamic reduction (paper Lemmas 5, 7, 8) ----
     if cfg.dynamic_red:
         carry, rf = red.dynamic_reduce(carry, cfg, ctx, P, Xp, xal, rsz, Rb,
-                                       enable)
+                                       enable, pre=pre)
         P, Xp, xal, Rb, rsz = rf.P, rf.Xp, rf.xal, rf.Rb, rf.rsz
     else:
         rf = None
@@ -58,18 +64,89 @@ def enter_call(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
 
     # ---- branch set (pivot backends; rcd recomputes per visit) ----
     if cfg.backend in ("pivot", "revised"):
-        B = piv.branch_set(cfg, ctx, P, Xp, xal, rf)
+        B = piv.branch_set(cfg, ctx, P, Xp, xal, rf,
+                           deg=None if pre is None else pre[0])
     else:
         B = jnp.zeros_like(P)
     return carry, push, Frame(P=P, B=B, Xp=Xp, Rb=Rb, rsz=rsz, xal=xal)
 
 
 # ===========================================================================
-# Per-root DFS driver
+# Shared DFS step + per-root DFS driver
 # ===========================================================================
 
+def dfs_step(cfg, ctx: fr.RootContext, depth, stack, carry, live=None):
+    """One straight-line masked DFS step — no lax.cond.
+
+    Under vmap a cond lowers to SELECT over both branch results, which
+    copies every stack buffer per iteration (measured: >40% of the
+    engine's HBM bytes). Instead, branch work always executes with its
+    carry side-effects gated by `has_branch`, and stack writes land in
+    frames that are DEAD on the pop path (slots > new depth), so they
+    need no gating at all. (§Perf iteration 2, EXPERIMENTS.md.)
+
+    `live=None` is the per-root path (depth is known >= 0 inside the
+    while loop). The persistent engine passes `live = depth >= 0` per
+    lane: a dead lane reads/writes clamped slot 0, every side-effect is
+    masked off, and its depth passes through unchanged until a refill
+    revives it. Dead-lane stack writes are harmless: the clamped slot-0
+    write stores the frame's own values back, and the slot-1 child push
+    is overwritten by the next real push before any read (pushes always
+    precede descends)."""
+    lv = jnp.bool_(True) if live is None else live
+    d = depth if live is None else jnp.maximum(depth, 0)
+    f = stack.read(d)
+
+    if cfg.backend in ("pivot", "revised"):
+        has_branch = fr.any_bit(f.B) & lv
+        w = fr.first_bit_index(f.B)
+    else:
+        # rcd: clique test decides report-and-pop vs min-degree branch
+        hb, w = piv.rcd_select(ctx, f.P)
+        has_branch = hb & lv
+
+    # ---- pop path: rcd maximality check + report (gated) ----
+    if cfg.backend == "rcd":
+        carry = piv.rcd_maximality_report(carry, cfg, ctx, f.P, f.Xp,
+                                          f.xal, f.Rb, f.rsz,
+                                          has_branch | ~lv)
+
+    # ---- branch path: always computed, side-effects gated ----
+    wbit = ctx.eye[w]
+    # fused frame step: child sets + child degree sweep + Lemma-7 partner
+    # in one kernel pass over A (threaded into enter_call as `pre`)
+    childP, childXp, deg, partner = bitops.frame_step(ctx.A, f.P, f.Xp,
+                                                      ctx.A[w])
+    # X0 rows stay alive iff adjacent to w (bit w of their row)
+    row_word = jax.lax.dynamic_index_in_dim(
+        ctx.x_rows, w // WORD, axis=1, keepdims=False)
+    adj_w = ((row_word >> (w % WORD).astype(U32)) & U32(1)) != 0
+    childxal = f.xal & fr.mask_to_bitset(adj_w, ctx.eye_x)
+    carry = dict(carry,
+                 branches=carry["branches"] + has_branch.astype(jnp.int32))
+    carry, push, child = enter_call(carry, cfg, ctx, childP, childXp,
+                                    childxal, f.rsz + 1, f.Rb | wbit,
+                                    enable=has_branch, pre=(deg, partner))
+    # update current frame (dead slot on the pop path — no gating):
+    # P \ w, X ∪ w, B \ w
+    cur = dict(P=jnp.where(has_branch, f.P & ~wbit, f.P),
+               Xp=jnp.where(has_branch, f.Xp | wbit, f.Xp))
+    if cfg.backend in ("pivot", "revised"):
+        cur["B"] = jnp.where(has_branch, f.B & ~wbit, f.B)
+    stack = stack.write(d, **cur)
+    # write child frame (slot depth+1 is dead unless pushed)
+    nd = d + 1
+    stack = stack.push(nd, child)
+    new_depth = jnp.where(has_branch, jnp.where(push, nd, d), d - 1)
+    if live is not None:
+        new_depth = jnp.where(lv, new_depth, depth)
+    return new_depth, stack, carry
+
+
 def run_root(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
-    """Run the full BK subtree of one root. Returns the final carry dict."""
+    """Run the full BK subtree of one root. Returns the final carry dict
+    plus `iters` (loop iterations used) and `truncated` (1 iff the walk
+    hit cfg.max_iters with frames still live — the counts are partial)."""
     U, words = a.shape
     ctx = fr.make_context(a, x_rows)
     D = U + 2
@@ -88,60 +165,13 @@ def run_root(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
         return (s[0] >= 0) & (s[1] < cfg.max_iters)
 
     def body(s):
-        """Straight-line masked DFS step — no lax.cond.
-
-        Under vmap a cond lowers to SELECT over both branch results, which
-        copies every stack buffer per iteration (measured: >40% of the
-        engine's HBM bytes). Instead, branch work always executes with its
-        carry side-effects gated by `has_branch`, and stack writes land in
-        frames that are DEAD on the pop path (slots > new depth), so they
-        need no gating at all. (§Perf iteration 2, EXPERIMENTS.md.)"""
         depth, it, stack, carry = s
-        f = stack.read(depth)
-
-        if cfg.backend in ("pivot", "revised"):
-            has_branch = fr.any_bit(f.B)
-            w = fr.first_bit_index(f.B)
-        else:
-            # rcd: clique test decides report-and-pop vs min-degree branch
-            has_branch, w = piv.rcd_select(ctx, f.P)
-
-        # ---- pop path: rcd maximality check + report (gated) ----
-        if cfg.backend == "rcd":
-            carry = piv.rcd_maximality_report(carry, cfg, ctx, f.P, f.Xp,
-                                              f.xal, f.Rb, f.rsz, has_branch)
-
-        # ---- branch path: always computed, side-effects gated ----
-        wbit = ctx.eye[w]
-        childP = f.P & a[w]
-        childXp = f.Xp & a[w]
-        # X0 rows stay alive iff adjacent to w (bit w of their row)
-        row_word = jax.lax.dynamic_index_in_dim(
-            x_rows, w // WORD, axis=1, keepdims=False)
-        adj_w = ((row_word >> (w % WORD).astype(U32)) & U32(1)) != 0
-        childxal = f.xal & fr.mask_to_bitset(adj_w, ctx.eye_x)
-        carry = dict(carry,
-                     branches=carry["branches"] + has_branch.astype(jnp.int32))
-        carry, push, child = enter_call(carry, cfg, ctx, childP, childXp,
-                                        childxal, f.rsz + 1, f.Rb | wbit,
-                                        enable=has_branch)
-        # update current frame (dead slot on the pop path — no gating):
-        # P \ w, X ∪ w, B \ w
-        cur = dict(P=jnp.where(has_branch, f.P & ~wbit, f.P),
-                   Xp=jnp.where(has_branch, f.Xp | wbit, f.Xp))
-        if cfg.backend in ("pivot", "revised"):
-            cur["B"] = jnp.where(has_branch, f.B & ~wbit, f.B)
-        stack = stack.write(depth, **cur)
-        # write child frame (slot depth+1 is dead unless pushed)
-        nd = depth + 1
-        stack = stack.push(nd, child)
-        new_depth = jnp.where(has_branch,
-                              jnp.where(push, nd, depth), depth - 1)
-        return new_depth, it + 1, stack, carry
+        depth, stack, carry = dfs_step(cfg, ctx, depth, stack, carry)
+        return depth, it + 1, stack, carry
 
     state = (depth0, jnp.int32(0), stack0, carry0)
-    state = jax.lax.while_loop(cond, body, state)
-    return state[-1]
+    depth, it, _stack, carry = jax.lax.while_loop(cond, body, state)
+    return dict(carry, iters=it, truncated=(depth >= 0).astype(jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -150,6 +180,137 @@ def run_bucket(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
     return jax.vmap(lambda aa, pp, xr, xa, rr: run_root(aa, pp, xr, xa, rr,
                                                         cfg))(
         a, p0, x_rows, x_alive0, rsz0)
+
+
+# ===========================================================================
+# Persistent bucket engine: lane-refill work queue (DESIGN.md §2.6)
+# ===========================================================================
+
+@partial(jax.jit, static_argnames=("cfg", "lanes"))
+def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
+                          lanes: int = 64):
+    """One jitted while_loop over a (LANES, …) batch of DFS states fed by a
+    device-resident root work queue.
+
+    The per-root `run_bucket` vmaps lock-step: every lane spins (masked)
+    until the slowest root in the bucket finishes. Here a lane whose
+    subtree exhausts (`depth < 0`) claims the next unstarted root inside
+    the loop body — shared claim counter + per-lane exclusive-cumsum
+    offsets, no host round-trip — and reinitializes its stack in place, so
+    lanes stay saturated until the queue drains. Roots are consumed in the
+    caller's array order (the driver passes its cost-descending canonical
+    order, so the queue order IS the checkpoint cursor order).
+
+    The refill phase is wrapped in a real `lax.cond`: unlike the vmapped
+    per-root body (where cond lowers to SELECT), this loop is not under
+    vmap, so iterations with no exhausted lane skip the (LANES, U, W)
+    root-context gathers entirely.
+
+    Returns the per-lane carry dict plus scalars: `iters` (loop trips),
+    `live_iters` (Σ useful lane-trips: live lanes per trip, plus claims
+    whose root completed inside its entry call — those do their whole
+    subtree's work in the refill; occupancy = live_iters /
+    (iters·lanes)), `claimed`, and `truncated` (1 iff cfg.max_iters hit
+    with work remaining)."""
+    R, U, words = a.shape
+    XC = x_rows.shape[1]
+    L = lanes
+    D = U + 2
+    eye = fr.eye_bits(U, words)
+    xc_words = max(-(-XC // WORD), 1)
+    eye_x = fr.eye_bits(XC, xc_words)
+
+    track = bool(cfg.out_cap)
+    carry0 = jax.tree.map(
+        lambda x: jnp.zeros((L,) + x.shape, x.dtype),
+        fr.carry_init(cfg, words, track_root=track))
+    stack0 = jax.tree.map(
+        lambda x: jnp.zeros((L,) + x.shape, x.dtype),
+        FrameStack.alloc(D, words, xc_words))
+    state0 = (jnp.int32(0),                    # it: loop trips
+              jnp.int32(0),                    # cp: queue claim counter
+              jnp.int32(0),                    # ls: Σ live lanes (occupancy)
+              jnp.full((L,), jnp.int32(-1)),   # per-lane DFS depth
+              jnp.zeros((L, U, words), U32),   # per-lane adjacency context
+              jnp.zeros((L, XC, words), U32),  # per-lane X0 rows
+              stack0, carry0)
+
+    def cond(s):
+        it, cp, _ls, depth = s[0], s[1], s[2], s[3]
+        return ((cp < R) | jnp.any(depth >= 0)) & (it < cfg.max_iters)
+
+    def refill(args):
+        """Claim protocol: exhausted lanes take consecutive queue slots."""
+        cp, ls, depth, al, xrl, stack, carry = args
+        exh = depth < 0
+        exh_i = exh.astype(jnp.int32)
+        offs = jnp.cumsum(exh_i) - exh_i       # exclusive cumsum per lane
+        cand = cp + offs
+        claim = exh & (cand < R)
+        idx = jnp.where(claim, cand, 0)
+        a_new = jnp.take(a, idx, axis=0)
+        p_new = jnp.take(p0, idx, axis=0)
+        xr_new = jnp.take(x_rows, idx, axis=0)
+        xa_new = jnp.take(x_alive0, idx, axis=0)
+        rz_new = jnp.take(rsz0, idx, axis=0)
+
+        def lane_entry(claim_l, idx_l, a_l, p_l, xr_l, xa_l, rz_l,
+                       depth_l, A_l, XR_l, stack_l, carry_l):
+            ctx = fr.RootContext(A=a_l, x_rows=xr_l, eye=eye, eye_x=eye_x)
+            if "cur_root" in carry_l:
+                carry_l = dict(carry_l, cur_root=jnp.where(
+                    claim_l, idx_l, carry_l["cur_root"]))
+            xal0 = fr.mask_to_bitset(xa_l, eye_x)
+            carry_l, push, f0 = enter_call(
+                carry_l, cfg, ctx, p_l, jnp.zeros(words, U32), xal0,
+                rz_l.astype(jnp.int32), jnp.zeros(words, U32),
+                enable=claim_l)
+            # merge the fresh root frame into stack slot 0 where claimed
+            old0 = stack_l.read(0)
+            f0m = Frame(*(jnp.where(claim_l, n, o)
+                          for n, o in zip(f0, old0)))
+            stack_l = stack_l.push(0, f0m)
+            depth_l = jnp.where(claim_l,
+                                jnp.where(push, jnp.int32(0), jnp.int32(-1)),
+                                depth_l)
+            A_l = jnp.where(claim_l, a_l, A_l)
+            XR_l = jnp.where(claim_l, xr_l, XR_l)
+            return depth_l, A_l, XR_l, stack_l, carry_l
+
+        depth, al, xrl, stack, carry = jax.vmap(lane_entry)(
+            claim, idx, a_new, p_new, xr_new, xa_new, rz_new,
+            depth, al, xrl, stack, carry)
+        cp = cp + jnp.sum(claim.astype(jnp.int32))
+        # a claimed root that finished inside its entry call (no push) did
+        # its whole subtree's work this trip — count it as a useful trip
+        ls = ls + jnp.sum((claim & (depth < 0)).astype(jnp.int32))
+        return cp, ls, depth, al, xrl, stack, carry
+
+    def body(s):
+        it, cp, ls, depth, al, xrl, stack, carry = s
+        need = (cp < R) & jnp.any(depth < 0)
+        cp, ls, depth, al, xrl, stack, carry = jax.lax.cond(
+            need, refill, lambda args: args,
+            (cp, ls, depth, al, xrl, stack, carry))
+        ls = ls + jnp.sum((depth >= 0).astype(jnp.int32))
+
+        def lane_step(a_l, xr_l, depth_l, stack_l, carry_l):
+            ctx = fr.RootContext(A=a_l, x_rows=xr_l, eye=eye, eye_x=eye_x)
+            return dfs_step(cfg, ctx, depth_l, stack_l, carry_l,
+                            live=depth_l >= 0)
+
+        depth, stack, carry = jax.vmap(lane_step)(al, xrl, depth, stack,
+                                                  carry)
+        return it + 1, cp, ls, depth, al, xrl, stack, carry
+
+    it, cp, ls, depth, _al, _xrl, _stack, carry = jax.lax.while_loop(
+        cond, body, state0)
+    out = dict(carry)
+    out["iters"] = it
+    out["live_iters"] = ls
+    out["claimed"] = cp
+    out["truncated"] = ((cp < R) | jnp.any(depth >= 0)).astype(jnp.int32)
+    return out
 
 
 # ===========================================================================
@@ -165,6 +326,7 @@ class MCEResult:
     pre_reported: int
     enumerated: Optional[List[frozenset]] = None
     overflow: bool = False
+    iters_exhausted: bool = False
 
 
 def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
@@ -172,8 +334,15 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
         enumerate_cliques: bool = False, out_cap: int = 4096,
         bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
         max_x_rows: int = 8192,
-        split_threshold: Optional[int] = None) -> MCEResult:
-    """End-to-end single-host MCE: prepare on host, run buckets on device."""
+        split_threshold: Optional[int] = None,
+        engine: str = "perroot", lanes: int = 64) -> MCEResult:
+    """End-to-end single-host MCE: prepare on host, run buckets on device.
+
+    `engine='persistent'` routes each bucket through the lane-refill work
+    queue (`run_bucket_persistent` with min(lanes, roots) lanes); the
+    default 'perroot' path vmaps one lock-step lane per root."""
+    if engine not in ("perroot", "persistent"):
+        raise ValueError(f"unknown engine {engine!r}")
     prep = prepare(g, global_red=global_red, x_red=x_red,
                    bucket_sizes=bucket_sizes, max_x_rows=max_x_rows,
                    split_threshold=split_threshold)
@@ -183,23 +352,41 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
                       sum_px=0, pre_reported=len(prep.pre_reported),
                       enumerated=list(prep.pre_reported) if enumerate_cliques else None)
     for bucket in prep.buckets:
-        out = run_bucket(jnp.asarray(bucket.a), jnp.asarray(bucket.p0),
-                         jnp.asarray(bucket.x_rows),
-                         jnp.asarray(bucket.x_alive0),
-                         jnp.asarray(bucket.rsz0), cfg)
+        args = (jnp.asarray(bucket.a), jnp.asarray(bucket.p0),
+                jnp.asarray(bucket.x_rows), jnp.asarray(bucket.x_alive0),
+                jnp.asarray(bucket.rsz0))
+        if engine == "persistent":
+            out = run_bucket_persistent(*args, cfg,
+                                        lanes=min(lanes, bucket.num_roots))
+        else:
+            out = run_bucket(*args, cfg)
         out = jax.tree.map(np.asarray, out)
         total.cliques += int(out["cliques"].sum())
-        total.calls += int(out["calls"].sum())
+        # padded no-op roots (compile-count hygiene) are one call each
+        total.calls += int(out["calls"].sum()) - bucket.n_pad
         total.branches += int(out["branches"].sum())
         total.sum_px += int(out["sum_px"].sum())
+        total.iters_exhausted |= bool(out["truncated"].any())
         if enumerate_cliques:
             total.overflow |= bool(out["overflow"].any())
-            for r in range(bucket.num_roots):
-                uni = bucket.universes[r]
-                base = [int(b) for b in bucket.bases[r]]
-                for k in range(int(out["out_n"][r])):
-                    bits = out["out_rows"][r, k]
-                    members = _unpack_bits_np(bits)
-                    clique = frozenset(base + [int(uni[m]) for m in members])
-                    total.enumerated.append(clique)
+            if engine == "persistent":
+                # lanes interleave roots; out_root maps each clique back
+                for l in range(out["out_n"].shape[0]):
+                    for k in range(int(out["out_n"][l])):
+                        r = int(out["out_root"][l, k])
+                        uni = bucket.universes[r]
+                        base = [int(b) for b in bucket.bases[r]]
+                        members = _unpack_bits_np(out["out_rows"][l, k])
+                        total.enumerated.append(frozenset(
+                            base + [int(uni[m]) for m in members]))
+            else:
+                for r in range(bucket.num_roots):
+                    uni = bucket.universes[r]
+                    base = [int(b) for b in bucket.bases[r]]
+                    for k in range(int(out["out_n"][r])):
+                        bits = out["out_rows"][r, k]
+                        members = _unpack_bits_np(bits)
+                        clique = frozenset(base + [int(uni[m])
+                                                   for m in members])
+                        total.enumerated.append(clique)
     return total

@@ -212,7 +212,8 @@ class PrepStream:
 
     # ---- stage 4: bucket packing + flush ---------------------------------
 
-    def _pack(self, bucket: int, specs: List[RootSpec]) -> RootBucket:
+    def _pack(self, bucket: int, specs: List[RootSpec],
+              n_pad: int = 0) -> RootBucket:
         t0 = time.perf_counter()
         f = self._front
         a, p0, x_rows, x_alive = pack_bucket(
@@ -224,9 +225,23 @@ class PrepStream:
             roots=np.array([s.base[0] for s in specs], np.int64),
             rsz0=np.array([len(s.base) for s in specs], np.int32),
             bases=[s.base for s in specs],
-            universes=[s.p_ids for s in specs])
+            universes=[s.p_ids for s in specs],
+            n_pad=n_pad)
         self.timings["pack"] += time.perf_counter() - t0
         return out
+
+    def _pad_count(self, n: int) -> int:
+        """Remainder-flush pad: round the root count up to the smallest
+        pow2 fraction of `stream_roots` that fits, so a long run's
+        executable shapes converge to O(log stream_roots) distinct root
+        counts per bucket size instead of one fresh compile per arbitrary
+        remainder (compile-count hygiene)."""
+        if not self.stream_roots or n >= self.stream_roots:
+            return 0
+        frac = self.stream_roots
+        while frac // 2 >= n:
+            frac //= 2
+        return frac - n
 
     def _bucket_of(self, u_size: int) -> int:
         for b in self.bucket_sizes:
@@ -251,7 +266,13 @@ class PrepStream:
             """Pack + book-keep one bucket; staging time since the last
             yield (minus pack time) lands in the `stage` timing."""
             pack_before = self.timings["pack"]
-            bk = self._pack(b, pending[b])
+            specs = pending[b]
+            n_pad = self._pad_count(len(specs))
+            if n_pad:
+                empty = np.zeros(0, np.int64)
+                specs = specs + [RootSpec(base=(-1,), p_ids=empty,
+                                          x_ids=empty)] * n_pad
+            bk = self._pack(b, specs, n_pad=n_pad)
             pending[b] = []
             self.num_buckets += 1
             if self.cache:

@@ -17,12 +17,15 @@ from repro.core.engine import frames as fr
 from repro.kernels.bitset_ops import ops as bitops
 
 
-def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red):
+def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red, deg=None):
     """Branch set B = P \\ N(pivot) for the 'pivot'/'revised' backends.
 
     `red` is the ReducedFrame from dynamic_reduce (None when dynamic
     reduction is off); with cfg.reuse_degrees its degP2/n_full replace the
-    third AND+popcount sweep over A (§Perf)."""
+    third AND+popcount sweep over A (§Perf). With dynamic reduction off,
+    `deg` (the fused frame-step degree vector over this very P) plays the
+    same role — jnp.where + argmax over it matches and_popcount_argmax's
+    scores and tie-breaking exactly."""
     U = ctx.u
     XC = ctx.xc
     in_p = fr.bitset_to_mask(P, U)
@@ -36,6 +39,10 @@ def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red):
         # the final P is exactly degP2 − n_full for surviving P members —
         # reuse instead of a third AND+popcount sweep of A.
         uni_scores = jnp.where(pool, red.degP2 - red.n_full, -1)
+        best_u = jnp.argmax(uni_scores)
+        su = uni_scores[best_u]
+    elif deg is not None and cfg.reuse_degrees:
+        uni_scores = jnp.where(pool, deg, -1)
         best_u = jnp.argmax(uni_scores)
         su = uni_scores[best_u]
     else:

@@ -36,6 +36,9 @@ class RootBucket:
     cost_order: Optional[np.ndarray] = None   # driver memo: canonical
     # cost-descending root order — cached so service-style replays of a
     # cached bucket skip the O(packed bytes) cost rescan
+    n_pad: int = 0                  # trailing no-op pad roots (remainder
+    # flushes padded to pow2 fractions of stream_roots; each contributes
+    # exactly one engine call and nothing else — callers subtract)
 
     @property
     def num_roots(self) -> int:

@@ -28,18 +28,27 @@ class ReducedFrame(NamedTuple):
 
 
 def dynamic_reduce(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
-                   enable):
+                   enable, pre=None):
     """Apply Lemmas 5/7/8 to the call (R, P, X); report advance cliques.
 
     Returns (carry, ReducedFrame). All clique reports are gated by `enable`;
     the frame outputs are well-defined garbage when enable is False (the
-    caller's stack write lands in a dead slot)."""
+    caller's stack write lands in a dead slot).
+
+    `pre` is the optional (degP, partner) pair from the fused frame-step
+    kernel — the DFS body already swept A against this call's P to build
+    it, so passing it here removes the first AND+popcount sweep and the
+    Lemma-7 partner extraction from this function."""
     U = ctx.u
     XC = ctx.xc
     A, x_rows, eye, eye_x = ctx.A, ctx.x_rows, ctx.eye, ctx.eye_x
     xal_mask = fr.bitset_to_mask(xal, XC)
 
-    degP = bitops.and_popcount_rows(A, P)              # (U,)
+    if pre is None:
+        degP = bitops.and_popcount_rows(A, P)          # (U,)
+        partner0 = fr.single_bit_index_rows(bitops.and_rows(A, P))
+    else:
+        degP, partner0 = pre
     in_p = fr.bitset_to_mask(P, U)
     xp_mask = fr.bitset_to_mask(Xp, U)
     marked_bits = fr.or_reduce(x_rows, xal_mask) | fr.or_reduce(A, xp_mask)
@@ -55,7 +64,7 @@ def dynamic_reduce(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
 
     # relaxed dynamic degree-one (Lemma 7)
     deg1 = in_p & (degP == 1)
-    partner = fr.single_bit_index_rows(bitops.and_rows(A, P))  # valid @ deg1
+    partner = partner0                                 # valid where deg == 1
     pclip = jnp.clip(partner, 0, U - 1)
     partner_deg1 = deg1 & deg1[pclip]
     mutual_skip = partner_deg1 & (pclip < jnp.arange(U))

@@ -376,15 +376,94 @@ def _triangle_edge_mask(g: CSRGraph) -> np.ndarray:
     return np.logical_or.reduceat(hit, offs)
 
 
+def _batch_lemma3(g: CSRGraph) -> Tuple[CSRGraph, List[np.ndarray], bool]:
+    """One conflict-free batch of Lemma-3 degree-2 eliminations.
+
+    Selects a maximal-by-claim set of degree-2 vertices whose *closed*
+    neighborhoods are pairwise disjoint (min-claim matching: every
+    candidate v stamps {v, u, w} with `np.minimum.at`; v survives iff it
+    owns all three cells). Disjoint closed neighborhoods make the batch
+    equal to SOME sequential order of Lemma 3 applications: deleting one
+    selected vertex — or its case-2 edge (u, w), whose endpoints v owns
+    exclusively — cannot change another selected vertex's neighborhood
+    or its (u', w') common-neighbor witness set (a degree-2 witness
+    adjacent to both u' and w' would itself have claimed them).
+
+    Returns (reduced graph, report segments, changed).
+    """
+    deg = g.degrees()
+    cand = np.nonzero(deg == 2)[0].astype(np.int64)
+    if len(cand) == 0:
+        return g, [], False
+    u = g.indices[g.indptr[cand]].astype(np.int64)
+    w = g.indices[g.indptr[cand] + 1].astype(np.int64)
+    claim = np.full(g.n, g.n, dtype=np.int64)
+    np.minimum.at(claim, cand, cand)
+    np.minimum.at(claim, u, cand)
+    np.minimum.at(claim, w, cand)
+    sel = (claim[cand] == cand) & (claim[u] == cand) & (claim[w] == cand)
+    if not sel.any():
+        return g, [], False
+    v_s, u_s, w_s = cand[sel], u[sel], w[sel]
+
+    from repro.graph.pack import _ranges
+
+    n = g.n
+    kt = np.int32 if n * n < (1 << 31) else np.int64
+    dk = (np.repeat(np.arange(n, dtype=kt), deg) * kt(n)
+          + g.indices.astype(kt))              # directed keys, CSR-sorted
+    q = u_s.astype(kt) * kt(n) + w_s.astype(kt)
+    pos = np.minimum(np.searchsorted(dk, q), max(len(dk) - 1, 0))
+    adj_uw = dk[pos] == q                      # is (u, w) an edge?
+
+    segments: List[np.ndarray] = []
+    if (~adj_uw).any():
+        # case: u, w non-adjacent -> two maximal 2-cliques {v,u}, {v,w}
+        v_n, u_n, w_n = v_s[~adj_uw], u_s[~adj_uw], w_s[~adj_uw]
+        segments.append(np.concatenate([np.stack([v_n, u_n], 1),
+                                        np.stack([v_n, w_n], 1)]))
+    doomed_uw = np.zeros((0, 2), dtype=np.int64)
+    if adj_uw.any():
+        # case: triangle {v,u,w} is maximal; edge (u,w) dies too unless
+        # some OTHER common neighbor keeps it in a second triangle
+        v_a, u_a, w_a = v_s[adj_uw], u_s[adj_uw], w_s[adj_uw]
+        segments.append(np.stack([v_a, u_a, w_a], 1))
+        swap = deg[u_a] > deg[w_a]
+        a = np.where(swap, w_a, u_a)           # expand the smaller side
+        b = np.where(swap, u_a, w_a)
+        counts = deg[a]                        # >= 2: adjacent to v and b
+        nb = g.indices[_ranges(g.indptr[a], counts)]
+        qq = np.repeat(b.astype(kt), counts) * kt(n) + nb.astype(kt)
+        pos = np.minimum(np.searchsorted(dk, qq), max(len(dk) - 1, 0))
+        hit = (dk[pos] == qq).astype(np.int64)
+        offs = np.cumsum(counts) - counts
+        ncom = np.add.reduceat(hit, offs)      # v itself counts once
+        lone = ncom < 2
+        if lone.any():
+            doomed_uw = np.stack([np.minimum(u_a, w_a),
+                                  np.maximum(u_a, w_a)], 1)[lone]
+
+    e = g.edges().astype(np.int64)
+    in_v = np.zeros(n, dtype=bool)
+    in_v[v_s] = True
+    drop = in_v[e[:, 0]] | in_v[e[:, 1]]
+    if len(doomed_uw):
+        ek = np.minimum(e[:, 0], e[:, 1]) * n + np.maximum(e[:, 0], e[:, 1])
+        drop |= np.isin(ek, doomed_uw[:, 0] * n + doomed_uw[:, 1])
+    g2 = from_edge_list(n, e[~drop])
+    return g2, segments, True
+
+
 def reduce_prepass(g: CSRGraph, max_rounds: int = 16
                    ) -> Tuple[CSRGraph, CliqueReports]:
     """Vectorized global-reduction pre-pass for the ingest pipeline.
 
-    Alternates the deg-0/1 peel (`peel_low_degree`) with a *batch*
-    non-triangle edge sweep (Lemma 4) until fixpoint, so the python
-    cascade in `global_reduce_host` only ever sees the stubborn core —
-    on hub-heavy graphs this is >90% of the edge rule's work done in a
-    handful of numpy passes.
+    Alternates the deg-0/1 peel (`peel_low_degree`) with a conflict-free
+    *batch* Lemma-3 round (`_batch_lemma3`) and a *batch* non-triangle
+    edge sweep (Lemma 4) until fixpoint, so the python cascade in
+    `global_reduce_host` only ever sees the stubborn core — on hub-heavy
+    graphs this is >90% of the vertex+edge rules' work done in a handful
+    of numpy passes.
 
     Batch validity: every edge of a triangle shares a neighbor with the
     other two, so no triangle edge is Lemma-4-removable and no removable
@@ -399,6 +478,11 @@ def reduce_prepass(g: CSRGraph, max_rounds: int = 16
         changed = g2 is not g
         g = g2
         segments += r._segs
+        if g.m == 0:
+            break
+        g, segs3, ch3 = _batch_lemma3(g)
+        segments += segs3
+        changed |= ch3
         if g.m == 0:
             break
         tri = _triangle_edge_mask(g)

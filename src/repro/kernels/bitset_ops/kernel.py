@@ -133,6 +133,72 @@ def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
     return jnp.argmax(scores).astype(jnp.int32), jnp.max(scores)
 
 
+def _frame_step_kernel(rows_ref, p_ref, xp_ref, wrow_ref,
+                       childp_ref, childxp_ref, deg_ref, partner_ref):
+    rows = rows_ref[...]                      # (BK, W) uint32
+    p = p_ref[...]                            # (1, W) uint32
+    xp = xp_ref[...]                          # (1, W) uint32
+    wrow = wrow_ref[...]                      # (1, W) uint32
+    childp = jnp.bitwise_and(p, wrow)
+    # (1, W) output blocks are revisited by every grid step but each write
+    # is the same full-block value (idempotent), so the batched-grid
+    # lowering under vmap stays correct — no cross-step accumulation.
+    childp_ref[...] = childp
+    childxp_ref[...] = jnp.bitwise_and(xp, wrow)
+    anded = jnp.bitwise_and(rows, childp)
+    pc = jax.lax.population_count(anded).astype(jnp.float32)
+    deg_ref[...] = jnp.sum(pc, axis=1, keepdims=True).astype(jnp.int32)
+    # per-word lowest-set-bit position; summed contributions are exact when
+    # exactly one bit survives (the Lemma-7 partner), garbage otherwise
+    low = jnp.bitwise_and(anded, jnp.uint32(0) - anded)
+    pos = jax.lax.population_count(low - jnp.uint32(1)).astype(jnp.float32)
+    wi = jax.lax.broadcasted_iota(jnp.float32, anded.shape, 1) * 32.0
+    contrib = jnp.where(anded != 0, wi + pos, 0.0)
+    partner_ref[...] = jnp.sum(contrib, axis=1,
+                               keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
+               wrow: jnp.ndarray, block_k: int = DEFAULT_BLOCK_K,
+               interpret: bool = True):
+    """Fused BK frame step (see ref.frame_step for the contract).
+
+    rows: (K, W) uint32, p/xp/wrow: (W,) uint32 ->
+    (childp (W,), childxp (W,), deg (K,) int32, partner (K,) int32).
+
+    One VMEM pass per row tile fuses the child-set ANDs, the AND+popcount
+    degree sweep, and the Lemma-7 partner extraction that the engine's hot
+    loop previously issued as separate passes over A.
+    """
+    k, w = rows.shape
+    bk = min(block_k, k)
+    k_pad = -(-k // bk) * bk
+    if k_pad != k:
+        rows = jnp.pad(rows, ((0, k_pad - k), (0, 0)))
+    grid = (k_pad // bk,)
+    childp, childxp, deg, partner = pl.pallas_call(
+        _frame_step_kernel,
+        out_shape=(jax.ShapeDtypeStruct((1, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((1, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((k_pad, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((k_pad, 1), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, w), lambda i: (i, 0)),      # row tile in VMEM
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, w), lambda i: (0, 0)),
+                   pl.BlockSpec((1, w), lambda i: (0, 0)),
+                   pl.BlockSpec((bk, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bk, 1), lambda i: (i, 0))),
+        interpret=interpret,
+    )(rows, p[None, :], xp[None, :], wrow[None, :])
+    return childp[0], childxp[0], deg[:k, 0], partner[:k, 0]
+
+
 def _and_popcount_many_kernel(rows_ref, masks_ref, out_ref):
     rows = rows_ref[...]                      # (BK, W) uint32
     masks = masks_ref[...]                    # (BM, W) uint32

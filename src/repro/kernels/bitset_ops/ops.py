@@ -73,3 +73,17 @@ def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
     if _on_tpu() and rows.ndim == 2 and masks.ndim == 2:
         return kernel.and_popcount_many(rows, masks, interpret=False)
     return ref.and_popcount_many(rows, masks)
+
+
+def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
+               wrow: jnp.ndarray):
+    """Fused BK frame step: (childp, childxp, deg, partner).
+
+    childp = p & wrow, childxp = xp & wrow, deg[k] = popcount(rows[k] &
+    childp), partner[k] = the surviving bit index where deg[k] == 1 (the
+    Lemma-7 partner; garbage elsewhere). One kernel pass replaces the
+    engine's separate child-AND, degree-sweep, and partner-extraction
+    passes over the (K, W) adjacency."""
+    if _on_tpu() and rows.ndim == 2:
+        return kernel.frame_step(rows, p, xp, wrow, interpret=False)
+    return ref.frame_step(rows, p, xp, wrow)

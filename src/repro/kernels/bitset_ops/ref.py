@@ -41,6 +41,32 @@ def and_popcount_argmax(rows: jnp.ndarray, mask: jnp.ndarray,
     return idx, best
 
 
+def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
+               wrow: jnp.ndarray):
+    """Fused BK frame step: child-set construction + degree/partner sweep.
+
+    rows: (..., K, W) uint32 adjacency, p/xp/wrow: (..., W) uint32.
+    Returns (childp, childxp, deg, partner):
+      childp  = p  & wrow                      (..., W)  child candidate set
+      childxp = xp & wrow                      (..., W)  child forbidden set
+      deg[k]  = popcount(rows[k] & childp)     (..., K)  child degree vector
+      partner[k] = Σ_words (32·w + lowest-set-bit-pos) over nonzero words of
+      rows[k] & childp — the exact bit index when deg[k] == 1 (the Lemma-7
+      partner), deterministic garbage otherwise. Callers only read partner
+      where deg == 1.
+    """
+    childp = jnp.bitwise_and(p, wrow)
+    childxp = jnp.bitwise_and(xp, wrow)
+    anded = jnp.bitwise_and(rows, childp[..., None, :])
+    deg = jnp.sum(jax.lax.population_count(anded), axis=-1).astype(jnp.int32)
+    low = jnp.bitwise_and(anded, jnp.uint32(0) - anded)
+    pos = jax.lax.population_count(low - jnp.uint32(1)).astype(jnp.int32)
+    wi = 32 * jnp.arange(anded.shape[-1], dtype=jnp.int32)
+    contrib = jnp.where(anded != 0, wi + pos, jnp.int32(0))
+    partner = jnp.sum(contrib, axis=-1).astype(jnp.int32)
+    return childp, childxp, deg, partner
+
+
 def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
     """One row matrix against a batch of masks.
 

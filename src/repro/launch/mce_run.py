@@ -70,6 +70,13 @@ def main() -> None:
                     help="streamed bucket flush size (part of the elastic "
                          "schedule identity — keep it fixed across restarts)")
     ap.add_argument("--split-threshold", type=int, default=None)
+    ap.add_argument("--engine", choices=("perroot", "persistent"),
+                    default="perroot",
+                    help="perroot: lock-step vmap over chunk roots; "
+                         "persistent: lane-refill work queue (one while_loop "
+                         "per shard, exhausted lanes claim the next root)")
+    ap.add_argument("--lanes", type=int, default=64,
+                    help="persistent engine: resident DFS lanes per shard")
     args = ap.parse_args()
 
     g = parse_graph(args.graph)
@@ -80,7 +87,8 @@ def main() -> None:
         cfg=EngineConfig(dynamic_red=args.dred, backend=args.backend),
         global_red=args.gred, x_red=args.xred,
         streaming=not args.materialize, stream_roots=args.stream_roots,
-        split_threshold=args.split_threshold)
+        split_threshold=args.split_threshold,
+        engine=args.engine, lanes=args.lanes)
     init_s = time.time() - t0
     t0 = time.time()
     res = drv.run(resume=args.resume)
@@ -88,6 +96,9 @@ def main() -> None:
     print(f"maximal cliques: {res.cliques} "
           f"(pre-reported {res.pre_reported}, calls {res.calls}, "
           f"branches {res.branches})")
+    if res.iters_exhausted:
+        print("WARNING: max_iters hit — counts are a lower bound; "
+              "raise EngineConfig.max_iters")
     tm = drv.stream.timings if drv.stream is not None else {}
     stage_str = " ".join(f"{k} {v:.2f}s" for k, v in tm.items())
     n_buckets = (drv.stream.num_buckets if drv.stream is not None

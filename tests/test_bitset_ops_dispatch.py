@@ -187,6 +187,78 @@ def test_vmap_and_popcount_many_parity(b, k, m, w):
 
 
 # --------------------------------------------------------------------------
+# frame_step: fused child-set + degree + Lemma-7 partner step
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,w,block_k", [
+    (1, 1, 256), (7, 4, 4), (100, 8, 32), (515, 4, 256),  # K % block_k != 0
+    (64, 128, 64),                # W at the lane boundary
+    (33, 160, 16),                # W over the boundary
+])
+def test_frame_step_parity(k, w, block_k):
+    rows = jnp.asarray(_rand((k, w), k + w))
+    p = jnp.asarray(_rand((w,), k * w + 1))
+    xp = jnp.asarray(_rand((w,), k * w + 2))
+    wrow = jnp.asarray(_rand((w,), k * w + 3))
+    got = bk.frame_step(rows, p, xp, wrow, block_k=block_k, interpret=True)
+    want = ref.frame_step(rows, p, xp, wrow)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_frame_step_python_int_crosscheck():
+    """Independent oracle: deg vs python big-ints, partner exact at deg 1."""
+    rows = _rand((40, 3), 21)
+    p = _rand((3,), 22)
+    xp = _rand((3,), 23)
+    wrow = _rand((3,), 24)
+    childp, childxp, deg, partner = ref.frame_step(
+        jnp.asarray(rows), jnp.asarray(p), jnp.asarray(xp), jnp.asarray(wrow))
+    p_int = int.from_bytes(p.tobytes(), "little")
+    w_int = int.from_bytes(wrow.tobytes(), "little")
+    cp_int = int.from_bytes(np.asarray(childp).tobytes(), "little")
+    assert cp_int == p_int & w_int
+    assert (int.from_bytes(np.asarray(childxp).tobytes(), "little")
+            == int.from_bytes(xp.tobytes(), "little") & w_int)
+    for ki in range(40):
+        r_int = int.from_bytes(rows[ki].tobytes(), "little")
+        anded = r_int & cp_int
+        assert int(deg[ki]) == bin(anded).count("1")
+        if int(deg[ki]) == 1:
+            assert int(partner[ki]) == anded.bit_length() - 1
+
+
+def test_vmap_frame_step_parity():
+    b, k, w = 3, 100, 8
+    rows = jnp.asarray(_rand((b, k, w), 31))
+    p = jnp.asarray(_rand((b, w), 32))
+    xp = jnp.asarray(_rand((b, w), 33))
+    wrow = jnp.asarray(_rand((b, w), 34))
+    got = jax.vmap(lambda r, pp, xx, ww: bk.frame_step(
+        r, pp, xx, ww, block_k=32, interpret=True))(rows, p, xp, wrow)
+    want = ref.frame_step(rows, p, xp, wrow)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_vmap_frame_step_every_batch_element_initialised():
+    """The (1, W) child-set output blocks are revisited by every grid step;
+    under vmap each batch element must still get its own (idempotent)
+    value — stacked distinct examples must match per-example refs."""
+    b = 4
+    rows = jnp.asarray(_rand((b, 40, 4), 41))
+    p = jnp.asarray(_rand((b, 4), 42))
+    xp = jnp.asarray(_rand((b, 4), 43))
+    wrow = jnp.asarray(_rand((b, 4), 44))
+    got = jax.vmap(lambda r, pp, xx, ww: bk.frame_step(
+        r, pp, xx, ww, block_k=8, interpret=True))(rows, p, xp, wrow)
+    for bi in range(b):
+        want = ref.frame_step(rows[bi], p[bi], xp[bi], wrow[bi])
+        for g, r in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g[bi]), np.asarray(r))
+
+
+# --------------------------------------------------------------------------
 # dispatcher routing: TPU 2-D -> kernel, batch dims -> ref fallback
 # --------------------------------------------------------------------------
 

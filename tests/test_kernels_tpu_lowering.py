@@ -70,6 +70,13 @@ def test_lower_and_popcount_many_vmem_clamp(k, m, w):
                _rand((k, w), 14), _rand((m, w), 15))
 
 
+def test_lower_frame_step():
+    _lower_tpu(lambda r, p, x, wr: bk.frame_step(r, p, x, wr,
+                                                 interpret=False),
+               _rand((K, W), 16), _rand((W,), 17), _rand((W,), 18),
+               _rand((W,), 19))
+
+
 # Vmapped lowering: run_bucket vmaps run_root, so on TPU the pallas_calls
 # compile with the batch axis prepended to the grid — lower exactly that.
 
@@ -94,3 +101,11 @@ def test_lower_vmapped_and_popcount_many():
     _lower_tpu(
         jax.vmap(lambda r, ms: bk.and_popcount_many(r, ms, interpret=False)),
         _rand((B, K, W), 12), _rand((B, M, W), 13))
+
+
+def test_lower_vmapped_frame_step():
+    _lower_tpu(
+        jax.vmap(lambda r, p, x, wr: bk.frame_step(r, p, x, wr,
+                                                   interpret=False)),
+        _rand((B, K, W), 20), _rand((B, W), 21), _rand((B, W), 22),
+        _rand((B, W), 23))

@@ -1,0 +1,249 @@
+"""Persistent device-resident BK engine: lane-refill work queue.
+
+Parity contract: the persistent engine must reproduce the per-root
+engine's counters bit-for-bit (cliques, calls, branches, sum_px) AND the
+same enumerated clique sets — lanes interleave roots, so any masking bug
+in the dead-lane/refill path shows up as a count or set diff here.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oracle
+from repro.core.driver import DistributedMCE
+from repro.core.engine import (EngineConfig, PrepStream, prepare, run,
+                               run_bucket, run_bucket_persistent)
+from repro.graph import generators as gen
+from repro.graph.csr import from_edge_list
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+GRAPHS = {
+    "er": lambda: gen.erdos_renyi(60, 0.3, seed=0),
+    "ba": lambda: gen.barabasi_albert(80, 5, seed=1),
+    "caveman": lambda: gen.caveman(8, 6, seed=2),
+}
+
+
+def skewed_graph(n=300, m=3, blob=24, p=0.7, seed=7):
+    """Sparse BA graph with one planted dense blob: a single hub root's
+    subtree dwarfs every other root — the lock-step worst case."""
+    g = gen.barabasi_albert(n, m, seed=seed)
+    rng = np.random.default_rng(seed)
+    extra = [(i, j) for i in range(blob) for j in range(i + 1, blob)
+             if rng.random() < p]
+    e = np.concatenate([g.edges().astype(np.int64),
+                        np.array(extra, np.int64)])
+    key = e[:, 0] * n + e[:, 1]
+    e = e[np.unique(key, return_index=True)[1]]
+    return from_edge_list(n, e)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pivot", "rcd", "revised"])
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_persistent_matches_perroot_counts(backend, gname):
+    g = GRAPHS[gname]()
+    ref = run(g, backend=backend, engine="perroot")
+    res = run(g, backend=backend, engine="persistent", lanes=7)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    assert res.cliques == len(oracle.bk_pivot(g))
+    assert not res.iters_exhausted
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_persistent_enumerates_same_sets(gname):
+    g = GRAPHS[gname]()
+    ref = run(g, enumerate_cliques=True, engine="perroot")
+    res = run(g, enumerate_cliques=True, engine="persistent", lanes=5)
+    assert not res.overflow and not ref.overflow
+    assert set(res.enumerated) == set(ref.enumerated)
+    assert set(res.enumerated) == set(oracle.bk_pivot(g))
+
+
+def test_skewed_root_regression():
+    """One unsplit hub root + many tiny roots in ONE bucket: exhausted
+    lanes must refill from the queue while the hub lane keeps walking."""
+    g = skewed_graph()
+    ref = run(g, bucket_sizes=(64,), engine="perroot")
+    res = run(g, bucket_sizes=(64,), engine="persistent", lanes=8)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    assert res.cliques == len(oracle.bk_pivot(g))
+
+
+def test_persistent_lanes_exceed_roots():
+    """lanes > queue length: surplus lanes stay dead and contribute
+    nothing (run() clamps, but the kernel must tolerate it directly)."""
+    g = gen.erdos_renyi(40, 0.25, seed=3)
+    prep = prepare(g, bucket_sizes=(64,))
+    (b,) = prep.buckets
+    cfg = EngineConfig()
+    args = (jnp.asarray(b.a), jnp.asarray(b.p0), jnp.asarray(b.x_rows),
+            jnp.asarray(b.x_alive0), jnp.asarray(b.rsz0))
+    ref = run_bucket(*args, cfg)
+    out = run_bucket_persistent(*args, cfg, lanes=b.num_roots + 13)
+    for k in ("cliques", "calls", "branches", "sum_px"):
+        assert int(out[k].sum()) == int(ref[k].sum()), k
+    assert int(out["claimed"]) == b.num_roots
+    assert int(out["truncated"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# max_iters truncation flag (satellite: run_root used to truncate silently)
+# ---------------------------------------------------------------------------
+
+def _bucket_args(g, bucket_sizes=(64,)):
+    prep = prepare(g, bucket_sizes=bucket_sizes)
+    (b,) = prep.buckets
+    return (jnp.asarray(b.a), jnp.asarray(b.p0), jnp.asarray(b.x_rows),
+            jnp.asarray(b.x_alive0), jnp.asarray(b.rsz0))
+
+
+@pytest.mark.parametrize("runner", ["perroot", "persistent"])
+def test_truncation_flag_set_when_iters_exhausted(runner):
+    g = gen.erdos_renyi(50, 0.3, seed=4)
+    args = _bucket_args(g)
+    full = run_bucket(*args, EngineConfig())
+    assert int(full["truncated"].sum()) == 0
+    need = int(full["iters"].max())
+    cfg = EngineConfig(max_iters=max(need // 4, 2))
+    if runner == "perroot":
+        out = run_bucket(*args, cfg)
+        assert int(out["truncated"].sum()) > 0
+        assert int(out["cliques"].sum()) < int(full["cliques"].sum())
+    else:
+        out = run_bucket_persistent(*args, cfg, lanes=4)
+        assert int(out["truncated"]) == 1
+
+
+def test_run_surfaces_iters_exhausted_flag():
+    g = gen.erdos_renyi(60, 0.3, seed=5)
+    res = run(g)
+    assert res.iters_exhausted is False
+
+
+# ---------------------------------------------------------------------------
+# Remainder-flush pow2 padding (compile-count hygiene)
+# ---------------------------------------------------------------------------
+
+def test_remainder_flush_pads_to_pow2_fraction():
+    g = gen.barabasi_albert(500, 5, seed=6)
+    sr = 64
+    stream = PrepStream(g, bucket_sizes=(32, 64), stream_roots=sr)
+    buckets = list(stream)
+    assert buckets
+    for b in buckets:
+        assert b.num_roots <= sr
+        assert sr % b.num_roots == 0, \
+            f"flush of {b.num_roots} roots is not a pow2 fraction of {sr}"
+        real = b.num_roots - b.n_pad
+        if b.n_pad:
+            # pads are empty no-op roots appended at the tail
+            for r in range(real, b.num_roots):
+                assert b.bases[r] == (-1,)
+                assert len(b.universes[r]) == 0
+        # padding is minimal: the next smaller pow2 would not fit
+        if b.num_roots < sr:
+            assert real > b.num_roots // 2
+
+    # executable-count: every bucket of a size runs through ONE compile
+    # per distinct (u_pad, root-count) pair — pow2 padding caps that at
+    # O(log stream_roots) instead of one per ragged remainder
+    jax.clear_caches()
+    cfg = EngineConfig()
+    for b in buckets:
+        run_bucket(jnp.asarray(b.a), jnp.asarray(b.p0),
+                   jnp.asarray(b.x_rows), jnp.asarray(b.x_alive0),
+                   jnp.asarray(b.rsz0), cfg)
+    distinct = {(b.u_pad, b.num_roots, b.x_rows.shape[1]) for b in buckets}
+    assert run_bucket._cache_size() <= len(distinct)
+
+
+def test_padded_stream_counts_match_unpadded():
+    g = gen.barabasi_albert(500, 5, seed=6)
+    ref = run(g, bucket_sizes=(32, 64))        # stream_roots=0: no padding
+    cfgs = dict(bucket_sizes=(32, 64), stream_roots=64)
+    drv = DistributedMCE(g, chunk=16, **cfgs)
+    res = drv.run()
+    assert res.cliques == ref.cliques
+    assert res.calls == ref.calls
+
+
+# ---------------------------------------------------------------------------
+# Driver integration + mid-queue elastic restart
+# ---------------------------------------------------------------------------
+
+def test_driver_persistent_matches_perroot():
+    g = gen.barabasi_albert(400, 5, seed=3)
+    ref = DistributedMCE(g, chunk=64, stream_roots=128).run()
+    res = DistributedMCE(g, chunk=64, stream_roots=128,
+                         engine="persistent", lanes=16).run()
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+
+
+def run_py(code: str, devices: int, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_midqueue_elastic_restart_persistent(tmp_path):
+    """Preempt the persistent driver mid-queue under 4 shards, resume
+    under 2: the canonical cost-descending cursor (= persistent queue
+    order) must land the restart on exactly the remaining roots."""
+    ck = str(tmp_path / "persistent.json")
+    out4 = run_py(f"""
+        from repro.core.driver import DistributedMCE
+        from repro.graph import barabasi_albert
+        g = barabasi_albert(400, 6, seed=9)
+        drv = DistributedMCE(g, chunk=16, ckpt_path={ck!r},
+                             bucket_sizes=(32, 64), stream_roots=64,
+                             engine="persistent", lanes=8)
+        n = 0
+        orig = drv._run_chunk
+        def failing(*args):
+            global n
+            if n >= 3: raise RuntimeError("preempted")
+            n += 1
+            return orig(*args)
+        drv._run_chunk = failing
+        try:
+            drv.run()
+        except RuntimeError:
+            pass
+        print("PARTIAL_OK")
+    """, devices=4)
+    assert "PARTIAL_OK" in out4
+    out2 = run_py(f"""
+        from repro.core.driver import DistributedMCE
+        from repro.core import bitset_engine
+        from repro.graph import barabasi_albert
+        g = barabasi_albert(400, 6, seed=9)
+        ref = bitset_engine.run(g, bucket_sizes=(32, 64))
+        drv = DistributedMCE(g, chunk=16, ckpt_path={ck!r},
+                             bucket_sizes=(32, 64), stream_roots=64,
+                             engine="persistent", lanes=8)
+        res = drv.run(resume=True)
+        print("CLIQUES", res.cliques, ref.cliques)
+        assert res.cliques == ref.cliques
+        assert res.calls == ref.calls
+        assert not res.iters_exhausted
+    """, devices=2)
+    assert "CLIQUES" in out2

@@ -6,7 +6,8 @@ from _hyp import given, strategies as st  # optional-hypothesis shim
 import jax.numpy as jnp
 
 from repro.core import oracle
-from repro.core.global_reduction import global_reduce_host, global_reduce_jnp
+from repro.core.global_reduction import (_batch_lemma3, global_reduce_host,
+                                         global_reduce_jnp, reduce_prepass)
 from repro.core.xreduction import x_prune_roots
 from repro.graph import (complete_graph, degeneracy_order, erdos_renyi,
                          from_edge_list, grid_road, random_geometric)
@@ -82,6 +83,88 @@ def test_global_reduce_jnp_masks(g):
     assert np.all(deg[av] >= 2)
     assert not np.any(deg[~av] > 0) or True  # dead vertices keep no edges
     assert np.all(~ae | (av[ei[0]] & av[ei[1]]))
+
+
+@given(any_graph())
+def test_batch_lemma3_preserves_cliques(g):
+    """One conflict-free deg-2 batch = some sequential Lemma-3 order:
+    reported ∪ mc(G') must equal mc(G) exactly, with no overlap."""
+    ref = oracle.maximal_cliques_brute(g)
+    g2, segs, _changed = _batch_lemma3(g)
+    reported = {frozenset(int(x) for x in row)
+                for s in segs for row in s.tolist()}
+    rest = set(oracle.bk_pivot(g2))
+    assert reported | rest == ref
+    assert not (reported & rest)
+    assert len(reported) + len(rest) == len(ref)
+
+
+@given(any_graph())
+def test_batch_lemma3_selection_is_conflict_free(g):
+    """Selected vertices (first column of every report row) must have
+    pairwise-disjoint CLOSED neighborhoods — the property that makes the
+    batch order-independent."""
+    _g2, segs, _ = _batch_lemma3(g)
+    owned = {}
+    for s in segs:
+        for row in s.tolist():
+            v = int(row[0])
+            for t in row:
+                assert owned.setdefault(int(t), v) == v, \
+                    f"vertex {t} touched by two selected deg-2 vertices"
+
+
+@given(any_graph())
+def test_reduce_prepass_with_lemma3_completeness(g):
+    """Full vectorized prepass (peel + batch Lemma 3 + edge sweep) then
+    the host cascade: exact multiset equality against brute force."""
+    ref = oracle.maximal_cliques_brute(g)
+    residual, reports = reduce_prepass(g)
+    red = global_reduce_host(residual)
+    rest = set(oracle.bk_pivot(red.graph))
+    pre = set(reports) | set(red.reported)
+    assert pre | rest == ref
+    assert not (pre & rest)
+    assert len(reports) + len(red.reported) + len(rest) == len(ref)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batch_lemma3_parity_seeded(seed):
+    """Deterministic pin of the batch Lemma-3 invariants (the @given
+    variants above only run where hypothesis is installed)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 60))
+    g = erdos_renyi(n, float(rng.uniform(0.03, 0.3)), seed=seed)
+    ref = set(oracle.bk_pivot(g))
+    g2, segs, _ = _batch_lemma3(g)
+    reported = {frozenset(int(x) for x in row)
+                for s in segs for row in s.tolist()}
+    rest = set(oracle.bk_pivot(g2))
+    assert reported | rest == ref
+    assert not (reported & rest)
+    residual, reports = reduce_prepass(g)
+    red = global_reduce_host(residual)
+    assert (set(reports) | set(red.reported)
+            | set(oracle.bk_pivot(red.graph))) == ref
+
+
+def test_batch_lemma3_triangle_edge_cases():
+    # v=0 deg-2 with adjacent neighbors (1,2); 1-2 also in a second
+    # triangle with 3 -> edge (1,2) must SURVIVE
+    g = from_edge_list(4, np.array([(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]))
+    g2, segs, ch = _batch_lemma3(g)
+    assert ch
+    rep = {frozenset(int(x) for x in r) for s in segs for r in s.tolist()}
+    assert frozenset((0, 1, 2)) in rep
+    e2 = {frozenset(e) for e in g2.edges().tolist()}
+    assert frozenset((1, 2)) in e2
+    # lone triangle: edge (u, w) has no other common neighbor -> deleted
+    g = from_edge_list(5, np.array([(0, 1), (0, 2), (1, 2), (1, 3), (2, 4)]))
+    g2, segs, ch = _batch_lemma3(g)
+    rep = {frozenset(int(x) for x in r) for s in segs for r in s.tolist()}
+    assert frozenset((0, 1, 2)) in rep
+    e2 = {frozenset(e) for e in g2.edges().tolist()}
+    assert frozenset((1, 2)) not in e2
 
 
 @given(any_graph())
