@@ -1,0 +1,23 @@
+"""mce_lint: AST-based static analysis for the repro package.
+
+Five rule families, each descended from a bug this repo shipped and
+fixed (DESIGN.md §7 documents the lineage and the suppression syntax):
+
+* R1 dispatch purity / layering  (layering.py — declarative LAYERS)
+* R2 vmap-unsafe kernel accumulators (kernel_rules.py)
+* R3 Mosaic compilability        (kernel_rules.py)
+* R4 tracer leaks / host syncs   (tracer_rules.py)
+* R5 donation safety             (donation.py)
+
+The package is stdlib-only (no jax import) so `python -m repro.analysis`
+and the CI lint job run without the accelerator stack.
+"""
+from repro.analysis.cli import RULE_FAMILIES, analyze, main
+from repro.analysis.findings import Finding, Suppressions
+from repro.analysis.layering import LAYERS, LayerRule
+from repro.analysis.modindex import PackageIndex
+
+__all__ = [
+    "RULE_FAMILIES", "analyze", "main", "Finding", "Suppressions",
+    "LAYERS", "LayerRule", "PackageIndex",
+]

@@ -1,0 +1,142 @@
+"""R1 — dispatch purity / layering: declarative import-graph contracts.
+
+Replaces the regex lint in tests/test_engine_layering.py with an
+AST-backed walker: imports are resolved (including relative forms and
+aliasing) before matching, so a mention of `ref` in a docstring no
+longer matters and `from repro.kernels.bitset_ops import ref as r`
+cannot hide behind formatting.
+
+The layer contracts live ONCE, here, as data (`LAYERS`); the test suite
+and the CLI both consume this table. Each rule descends from DESIGN.md
+§3 (kernel dispatch choke point) and §6 (ingest layering):
+
+* `kernel-privates` — the dead-Pallas-kernel bug (PR 1): the engine
+  imported the jnp `ref` directly and the TPU kernel was dead code on
+  the hot path. Only a kernel package may touch its own `ref`/`kernel`.
+* `graph-purity` — `graph/` is the bottom layer: numpy + siblings only.
+* `engine-no-upward` — the driver consumes the engine's stream, never
+  the other way around.
+* `driver-no-launch` — `core/driver.py` must stay launchable headless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import List, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.modindex import Module, PackageIndex
+
+RULE = "R1"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """One declarative layer contract.
+
+    scope/exclude are fnmatch globs over the module path relative to the
+    package root (posix, e.g. 'core/engine/loop.py'). `forbid` patterns
+    match resolved dotted import names with prefix semantics ('a.b' also
+    bans 'a.b.c'). `allow_only` restricts every same-package import to
+    the listed prefixes instead.
+    """
+    name: str
+    description: str
+    scope: Tuple[str, ...]
+    exclude: Tuple[str, ...] = ()
+    forbid: Tuple[str, ...] = ()
+    allow_only: Tuple[str, ...] = ()
+
+
+# The single source of truth for the repo's layer contracts
+# (tests/test_engine_layering.py asserts this table's coverage).
+LAYERS: Tuple[LayerRule, ...] = (
+    LayerRule(
+        name="kernel-privates",
+        description=("`ref`/`kernel` modules are private to their kernel "
+                     "package — all set algebra dispatches through `ops` "
+                     "(DESIGN.md §3; the PR-1 dead-kernel bug)"),
+        scope=("**",),
+        exclude=("kernels/*/*.py",),
+        forbid=("repro.kernels.*.ref", "repro.kernels.*.kernel"),
+    ),
+    LayerRule(
+        name="graph-purity",
+        description=("graph/ is the bottom layer: numpy + graph siblings "
+                     "only, never core/kernels/launch (DESIGN.md §6)"),
+        scope=("graph/*.py",),
+        allow_only=("repro.graph",),
+    ),
+    LayerRule(
+        name="engine-no-upward",
+        description=("core/engine/ never imports the driver or launch — "
+                     "the driver consumes the stream, not the reverse "
+                     "(DESIGN.md §6)"),
+        scope=("core/engine/*.py",),
+        forbid=("repro.core.driver", "repro.launch"),
+    ),
+    LayerRule(
+        name="driver-no-launch",
+        description="core/driver.py never imports launch/ (DESIGN.md §6)",
+        scope=("core/driver.py",),
+        forbid=("repro.launch",),
+    ),
+)
+
+
+def _matches_any(path: str, globs: Sequence[str]) -> bool:
+    return any(fnmatch.fnmatch(path, g) for g in globs)
+
+
+def _dotted_match(imp: str, pattern: str) -> bool:
+    """Prefix-aware dotted match: 'a.b' bans 'a.b' and 'a.b.c'."""
+    return fnmatch.fnmatch(imp, pattern) or fnmatch.fnmatch(imp, pattern + ".*")
+
+
+def _rewrite(pattern: str, package: str) -> str:
+    """Layer patterns are written against the canonical package name
+    'repro'; retarget them when linting a differently-named tree (the
+    fixture corpus uses throwaway package names)."""
+    if package == "repro" or not pattern.startswith("repro"):
+        return pattern
+    return package + pattern[len("repro"):]
+
+
+def check_module(mod: Module, package: str,
+                 layers: Sequence[LayerRule] = LAYERS) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in layers:
+        if not _matches_any(mod.relpath, rule.scope):
+            continue
+        if _matches_any(mod.relpath, rule.exclude):
+            continue
+        forbid = [_rewrite(p, package) for p in rule.forbid]
+        allow = [_rewrite(p, package) for p in rule.allow_only]
+        for rec in mod.imports:
+            for cand in rec.candidates:
+                hit = None
+                for pat in forbid:
+                    if _dotted_match(cand, pat):
+                        hit = (f"imports `{cand}` (forbidden by layer rule "
+                               f"'{rule.name}': {rule.description})")
+                        break
+                if hit is None and allow and cand.startswith(package + "."):
+                    if not any(_dotted_match(cand, pat) or
+                               cand == pat for pat in allow):
+                        hit = (f"imports `{cand}` outside its layer "
+                               f"(rule '{rule.name}' allows only "
+                               f"{list(rule.allow_only)}: {rule.description})")
+                if hit:
+                    out.append(Finding(rule=RULE, path=mod.path,
+                                       line=rec.lineno, col=rec.col,
+                                       message=hit))
+                    break                          # one finding per import
+    return out
+
+
+def check(index: PackageIndex,
+          layers: Sequence[LayerRule] = LAYERS) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in index:
+        out.extend(check_module(mod, index.package, layers))
+    return out

@@ -1,0 +1,495 @@
+"""R4 — tracer leaks / host syncs inside traced code.
+
+Builds a call graph rooted at every traced region in the package:
+
+* functions decorated with (or wrapped by) `jax.jit` — parameters are
+  traced except those named by `static_argnames`/`static_argnums`;
+* kernel functions passed to `pl.pallas_call` (positional params traced,
+  keyword-only params are `functools.partial`-bound statics);
+* bodies handed to `lax.while_loop` / `lax.fori_loop` / `lax.scan` /
+  `lax.cond` / `lax.switch` / `jax.vmap` / `shard_map`.
+
+Within each root a taint analysis tracks which names hold traced values
+and flags the host round-trips that the persistent engine exists to
+eliminate (DESIGN.md §5): `int()`/`float()`/`bool()` coercions,
+`.item()`, `np.asarray`/`np.array` materialization, and python
+`if`/`while`/`for` control flow on a traced value (a silent
+concretization -> device sync, or a TracerBoolConversionError at trace
+time).
+
+Deliberately *not* tainted (each is a static quantity under trace):
+`.shape`/`.ndim`/`.size`/`.dtype`, `len()`, `x is None` tests, string
+membership tests against dict-of-tracer carries, and parameters listed
+as static. Calls into the package are followed (memoized, depth-capped);
+calls that cannot be resolved propagate taint conservatively but emit
+nothing.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.modindex import (Module, PackageIndex, call_name,
+                                     dotted_name, name_endswith)
+
+RULE = "R4"
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "weak_type", "sharding"}
+_UNTAINTED_CALLS = {"len", "range", "zip", "enumerate", "isinstance",
+                    "hasattr", "getattr", "type", "id", "repr", "str",
+                    "tuple", "list", "dict", "set", "frozenset", "sorted",
+                    "min", "max", "print"}
+_COERCIONS = {"int", "float", "bool", "complex"}
+_NUMPY_SINKS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "onp.asarray", "onp.array"}
+# callee suffix -> indices of positional args that are traced callables
+_COMBINATORS = {
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "scan": (0,),
+    "cond": (1, 2),
+    "switch": None,          # switch(index, [branches], *ops) — handled inline
+    "map": (0,),             # lax.map only — jax.tree.map is a host walk
+}
+# dotted prefixes whose calls produce tracers even from constant args
+_PRODUCER_PREFIXES = ("jnp.", "lax.", "jax.lax.", "jax.numpy.",
+                      "jax.random.", "jax.nn.", "jax.scipy.", "jsp.")
+_WRAPPERS = ("vmap", "pmap", "shard_map", "checkpoint", "remat", "grad",
+             "value_and_grad")
+_MAX_DEPTH = 10
+
+
+def _is_jit_expr(node: ast.AST) -> Optional[ast.Call]:
+    """Return the jit Call carrying static_* kwargs, if `node` is a jit
+    wrapper expression: jax.jit, jax.jit(**kw), partial(jax.jit, **kw)."""
+    if isinstance(node, ast.Call):
+        if name_endswith(node, "jit"):
+            return node
+        if name_endswith(node, "partial") and node.args and \
+                isinstance(node.args[0], (ast.Name, ast.Attribute)):
+            inner = dotted_name(node.args[0]) or ""
+            if inner.rpartition(".")[2] == "jit":
+                return node
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        if (dotted_name(node) or "").rpartition(".")[2] == "jit":
+            return ast.Call(func=node, args=[], keywords=[])
+    return None
+
+
+def _static_names(jit_call: ast.Call, fn: ast.FunctionDef) -> Set[str]:
+    """Param names excluded from tracing by static_argnames/static_argnums."""
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    out: Set[str] = set()
+    for kw in jit_call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                        and 0 <= n.value < len(params):
+                    out.add(params[n.value])
+    return out
+
+
+def _local_defs(scope: ast.AST) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in ast.walk(scope)
+            if isinstance(n, ast.FunctionDef)}
+
+
+class TracerTaint:
+    """Taint analysis over one package: roots -> findings."""
+
+    def __init__(self, index: PackageIndex):
+        self.index = index
+        self.findings: List[Finding] = []
+        self._memo: Dict[Tuple[int, frozenset], bool] = {}
+
+    # ---- root discovery --------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        for mod in self.index:
+            self._roots_in_module(mod)
+        return self.findings
+
+    def _roots_in_module(self, mod: Module) -> None:
+        # (a) decorated defs
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            for dec in node.decorator_list:
+                jit = _is_jit_expr(dec)
+                if jit is not None:
+                    statics = _static_names(jit, node)
+                    self._analyze(mod, node, self._param_taint(node, statics))
+        # (b) name = jax.jit(f, ...) / partial(jit, ...)(f)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and node.args):
+                continue
+            jit = _is_jit_expr(node.func)
+            if jit is None and isinstance(node.func, ast.Call):
+                jit = _is_jit_expr(node.func)
+            if jit is None:
+                continue
+            target = node.args[0]
+            if not isinstance(target, (ast.Name, ast.Attribute)):
+                continue
+            resolved = self.index.resolve_call_target(mod, target)
+            if resolved and isinstance(resolved[1], ast.FunctionDef):
+                tmod, fn = resolved[0], resolved[1]
+                statics = _static_names(node, fn)
+                # statics may also sit on the partial(jit, ...) wrapper
+                if isinstance(node.func, ast.Call):
+                    statics |= _static_names(node.func, fn)
+                self._analyze(tmod, fn, self._param_taint(fn, statics))
+        # (c) pallas_call kernels: positional params are refs (traced),
+        #     kw-only params are partial-bound statics
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and
+                    name_endswith(node, "pallas_call") and node.args):
+                continue
+            kfn = node.args[0]
+            if isinstance(kfn, ast.Call) and name_endswith(kfn, "partial") \
+                    and kfn.args:
+                kfn = kfn.args[0]
+            resolved = self.index.resolve_call_target(
+                mod, kfn, _local_defs(mod.tree))
+            if resolved and isinstance(resolved[1], ast.FunctionDef):
+                fn = resolved[1]
+                env = {a.arg: True
+                       for a in fn.args.posonlyargs + fn.args.args}
+                env.update({a.arg: False for a in fn.args.kwonlyargs})
+                self._analyze(resolved[0], fn, env)
+        # (d) bare combinator callsites (bodies whose enclosing function is
+        #     not itself a root still run traced)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                self._combinator_bodies(mod, node, _local_defs(mod.tree),
+                                        env=None)
+
+    @staticmethod
+    def _param_taint(fn: ast.FunctionDef, statics: Set[str]
+                     ) -> Dict[str, bool]:
+        env = {}
+        for a in (fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs):
+            env[a.arg] = a.arg not in statics
+        if fn.args.vararg:
+            env[fn.args.vararg.arg] = True
+        if fn.args.kwarg:
+            env[fn.args.kwarg.arg] = True
+        return env
+
+    # ---- per-function analysis -------------------------------------------
+
+    def _analyze(self, mod: Module, fn: ast.AST, env: Dict[str, bool],
+                 depth: int = 0) -> bool:
+        """Walk one function with `env` as the initial taint map.
+
+        Returns the taint of the function's return value (conservative).
+        """
+        if depth > _MAX_DEPTH:
+            return True
+        key = (id(fn), frozenset(k for k, v in env.items() if v))
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = True                      # conservative for cycles
+        if isinstance(fn, ast.Lambda):
+            ret = self._expr(mod, fn.body, env, _local_defs(fn), depth)
+            self._memo[key] = ret
+            return ret
+        if not isinstance(fn, ast.FunctionDef):
+            return True
+        local = _local_defs(fn)
+        ret_taint = [False]
+        self._stmts(mod, fn.body, env, local, depth, ret_taint)
+        self._memo[key] = ret_taint[0]
+        return ret_taint[0]
+
+    def _stmts(self, mod: Module, stmts: Sequence[ast.stmt],
+               env: Dict[str, bool], local: Dict[str, ast.FunctionDef],
+               depth: int, ret_taint: List[bool]) -> None:
+        for st in stmts:
+            if isinstance(st, ast.FunctionDef):
+                continue                       # analyzed only when invoked
+            if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = getattr(st, "value", None)
+                t = self._expr(mod, value, env, local, depth) \
+                    if value is not None else False
+                targets = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for tgt in targets:
+                    self._bind(tgt, t or (isinstance(st, ast.AugAssign) and
+                                          self._expr(mod, st.target, env,
+                                                     local, depth)), env)
+            elif isinstance(st, (ast.If, ast.While)):
+                if self._branch_taint(mod, st.test, env, local, depth):
+                    self.findings.append(Finding(
+                        rule=RULE, path=mod.path, line=st.test.lineno,
+                        col=st.test.col_offset,
+                        message=("python `if`/`while` on a traced value — "
+                                 "forces a host sync (or a trace-time "
+                                 "TracerBoolConversionError); use lax.cond/"
+                                 "jnp.where or mark the argument static "
+                                 "(DESIGN.md §5)")))
+                self._stmts(mod, st.body, env, local, depth, ret_taint)
+                self._stmts(mod, st.orelse, env, local, depth, ret_taint)
+            elif isinstance(st, ast.For):
+                if self._expr(mod, st.iter, env, local, depth):
+                    self.findings.append(Finding(
+                        rule=RULE, path=mod.path, line=st.iter.lineno,
+                        col=st.iter.col_offset,
+                        message=("python loop over a traced value — iterates "
+                                 "on device contents at trace time; use "
+                                 "lax.fori_loop/scan (DESIGN.md §5)")))
+                    self._bind(st.target, True, env)
+                else:
+                    self._bind(st.target, False, env)
+                # twice: propagate loop-carried taint
+                self._stmts(mod, st.body, env, local, depth, ret_taint)
+                self._stmts(mod, st.body, env, local, depth, ret_taint)
+                self._stmts(mod, st.orelse, env, local, depth, ret_taint)
+            elif isinstance(st, ast.Return):
+                if st.value is not None:
+                    ret_taint[0] |= bool(self._expr(mod, st.value, env,
+                                                    local, depth))
+            elif isinstance(st, ast.Expr):
+                self._expr(mod, st.value, env, local, depth)
+            elif isinstance(st, ast.With):
+                for item in st.items:
+                    self._expr(mod, item.context_expr, env, local, depth)
+                self._stmts(mod, st.body, env, local, depth, ret_taint)
+            elif isinstance(st, ast.Try):
+                self._stmts(mod, st.body, env, local, depth, ret_taint)
+                for h in st.handlers:
+                    self._stmts(mod, h.body, env, local, depth, ret_taint)
+                self._stmts(mod, st.finalbody, env, local, depth, ret_taint)
+            # Assert/Raise/Pass/Import/...: no taint flow worth tracking
+
+    def _bind(self, tgt: ast.AST, taint: bool, env: Dict[str, bool]) -> None:
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = bool(taint)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._bind(el, taint, env)
+        elif isinstance(tgt, ast.Starred):
+            self._bind(tgt.value, taint, env)
+        # Subscript/Attribute stores: container taint unchanged
+
+    def _branch_taint(self, mod: Module, test: ast.AST, env: Dict[str, bool],
+                      local: Dict[str, ast.FunctionDef], depth: int) -> bool:
+        """Taint of an if/while test, with the static-test exemptions."""
+        if isinstance(test, ast.Compare):
+            # `x is None` / `x is not None`: identity on the python object
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+                return False
+            # `"key" in carry`: membership over dict keys, not tracer data
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in test.ops) \
+                    and isinstance(test.left, ast.Constant):
+                return False
+        if isinstance(test, ast.BoolOp):
+            return any([self._branch_taint(mod, v, env, local, depth)
+                        for v in test.values])
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._branch_taint(mod, test.operand, env, local, depth)
+        return bool(self._expr(mod, test, env, local, depth))
+
+    # ---- expression taint (and sink detection) ---------------------------
+
+    def _expr(self, mod: Module, node: Optional[ast.AST],
+              env: Dict[str, bool], local: Dict[str, ast.FunctionDef],
+              depth: int) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return env.get(node.id, False)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                self._expr(mod, node.value, env, local, depth)
+                return False
+            return self._expr(mod, node.value, env, local, depth)
+        if isinstance(node, ast.Subscript):
+            return (self._expr(mod, node.value, env, local, depth) |
+                    self._expr(mod, node.slice, env, local, depth))
+        # NB: sub-expressions are evaluated eagerly (no short-circuit `any`
+        # over a generator) — sinks must be visited even after taint is known
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any([self._expr(mod, el, env, local, depth)
+                        for el in node.elts])
+        if isinstance(node, ast.Dict):
+            return any([self._expr(mod, v, env, local, depth)
+                        for v in list(node.keys) + list(node.values)
+                        if v is not None])
+        if isinstance(node, ast.BinOp):
+            return (self._expr(mod, node.left, env, local, depth) |
+                    self._expr(mod, node.right, env, local, depth))
+        if isinstance(node, ast.UnaryOp):
+            return self._expr(mod, node.operand, env, local, depth)
+        if isinstance(node, ast.BoolOp):
+            return any([self._expr(mod, v, env, local, depth)
+                        for v in node.values])
+        if isinstance(node, ast.Compare):
+            vals = [node.left] + list(node.comparators)
+            return any([self._expr(mod, v, env, local, depth) for v in vals])
+        if isinstance(node, ast.IfExp):
+            if self._branch_taint(mod, node.test, env, local, depth):
+                self.findings.append(Finding(
+                    rule=RULE, path=mod.path, line=node.test.lineno,
+                    col=node.test.col_offset,
+                    message=("conditional expression on a traced value — "
+                             "boolean coercion of a tracer; use jnp.where/"
+                             "lax.cond (DESIGN.md §5)")))
+            return (self._expr(mod, node.body, env, local, depth) |
+                    self._expr(mod, node.orelse, env, local, depth))
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            cenv = dict(env)
+            for gen in node.generators:
+                t = self._expr(mod, gen.iter, env, local, depth)
+                self._bind(gen.target, t, cenv)
+                for cond in gen.ifs:
+                    self._expr(mod, cond, cenv, local, depth)
+            if isinstance(node, ast.DictComp):
+                return (self._expr(mod, node.key, cenv, local, depth) |
+                        self._expr(mod, node.value, cenv, local, depth))
+            return self._expr(mod, node.elt, cenv, local, depth)
+        if isinstance(node, ast.Starred):
+            return self._expr(mod, node.value, env, local, depth)
+        if isinstance(node, ast.JoinedStr):
+            return False          # f-string repr of a tracer is legal
+        if isinstance(node, ast.Lambda):
+            return False          # analyzed when invoked via a combinator
+        if isinstance(node, ast.Call):
+            return self._call(mod, node, env, local, depth)
+        return False
+
+    def _call(self, mod: Module, node: ast.Call, env: Dict[str, bool],
+              local: Dict[str, ast.FunctionDef], depth: int) -> bool:
+        name = call_name(node) or ""
+        last = name.rpartition(".")[2]
+        arg_taints = [self._expr(mod, a, env, local, depth)
+                      for a in node.args]
+        kw_taints = {kw.arg: self._expr(mod, kw.value, env, local, depth)
+                     for kw in node.keywords}
+        any_taint = any(arg_taints) or any(kw_taints.values())
+
+        # ---- sinks ----
+        if isinstance(node.func, ast.Name) and node.func.id in _COERCIONS \
+                and any_taint:
+            self.findings.append(Finding(
+                rule=RULE, path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=(f"`{node.func.id}()` on a traced value — host "
+                         f"round-trip inside traced code (DESIGN.md §5)")))
+            return False
+        if last == "item" and isinstance(node.func, ast.Attribute) and \
+                self._expr(mod, node.func.value, env, local, depth):
+            self.findings.append(Finding(
+                rule=RULE, path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=("`.item()` on a traced value — device sync inside "
+                         "traced code (DESIGN.md §5)")))
+            return False
+        if name in _NUMPY_SINKS and any_taint:
+            self.findings.append(Finding(
+                rule=RULE, path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=(f"`{name}()` materializes a traced value on host "
+                         f"inside traced code (DESIGN.md §5)")))
+            return False
+
+        # ---- traced-region extension ----
+        self._combinator_bodies(mod, node, local, env)
+
+        # ---- interprocedural propagation ----
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in _UNTAINTED_CALLS:
+            return node.func.id in ("tuple", "list", "dict", "sorted",
+                                    "min", "max", "getattr") and any_taint
+        resolved = self.index.resolve_call_target(mod, node.func, local)
+        if resolved and isinstance(resolved[1], ast.FunctionDef):
+            tmod, fn = resolved
+            cenv = self._map_args(fn, arg_taints, kw_taints)
+            if cenv is not None:
+                return self._analyze(tmod, fn, cenv, depth + 1)
+        # jnp./lax. producers return tracers even from constant args; the
+        # broader jax.* namespace (default_backend, devices, tree.map) is
+        # host-side and stays on the conservative fallthrough below
+        if name.startswith(_PRODUCER_PREFIXES):
+            return True
+        # unresolved: propagate conservatively, flag nothing
+        base = self._expr(mod, node.func, env, local, depth) \
+            if isinstance(node.func, ast.Attribute) else False
+        return any_taint or base
+
+    @staticmethod
+    def _map_args(fn: ast.FunctionDef, arg_taints: List[bool],
+                  kw_taints: Dict[str, bool]) -> Optional[Dict[str, bool]]:
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        env: Dict[str, bool] = {p: False for p in params}
+        env.update({a.arg: False for a in fn.args.kwonlyargs})
+        for i, t in enumerate(arg_taints):
+            if i < len(params):
+                env[params[i]] = t
+            elif fn.args.vararg:
+                env[fn.args.vararg.arg] = env.get(fn.args.vararg.arg,
+                                                  False) or t
+        for k, t in kw_taints.items():
+            if k in env:
+                env[k] = t
+            elif k is None or fn.args.kwarg:
+                pass                               # **kwargs: ignore
+        return env
+
+    def _combinator_bodies(self, mod: Module, node: ast.Call,
+                           local: Dict[str, ast.FunctionDef],
+                           env: Optional[Dict[str, bool]]) -> None:
+        """Analyze function args of lax.while_loop/cond/scan/... and
+        jax.vmap(f)(...) with all params traced. `env` (when inside an
+        analyzed root) supplies closure-variable taint context; from the
+        module-level sweep it is None and closures read untainted."""
+        name = call_name(node) or ""
+        last = name.rpartition(".")[2]
+        closure = dict(env) if env else {}
+
+        def run_body(fn_expr: ast.AST) -> None:
+            if isinstance(fn_expr, ast.Lambda):
+                cenv = dict(closure)
+                for a in fn_expr.args.args:
+                    cenv[a.arg] = True
+                self._expr(mod, fn_expr.body, cenv, local, 1)
+                return
+            resolved = self.index.resolve_call_target(mod, fn_expr, local)
+            if resolved and isinstance(resolved[1], ast.FunctionDef):
+                tmod, fn = resolved
+                cenv = dict(closure)
+                cenv.update({a.arg: True for a in
+                             fn.args.posonlyargs + fn.args.args})
+                self._analyze(tmod, fn, cenv, depth=1)
+
+        if last == "map" and "lax" not in name.split("."):
+            return                                 # jax.tree.map / builtin map
+        if last in _COMBINATORS:
+            idxs = _COMBINATORS[last]
+            if last == "switch":
+                branches = node.args[1] if len(node.args) > 1 else None
+                if isinstance(branches, (ast.List, ast.Tuple)):
+                    for b in branches.elts:
+                        run_body(b)
+            elif idxs:
+                for i in idxs:
+                    if i < len(node.args):
+                        run_body(node.args[i])
+        elif last in _WRAPPERS and node.args:
+            run_body(node.args[0])
+        elif isinstance(node.func, ast.Call):
+            # jax.vmap(f)(xs) / shard_map(f, ...)(xs) call-through
+            inner = node.func
+            iname = (call_name(inner) or "").rpartition(".")[2]
+            if iname in _WRAPPERS and inner.args:
+                run_body(inner.args[0])
+
+
+def check(index: PackageIndex) -> List[Finding]:
+    return TracerTaint(index).run()

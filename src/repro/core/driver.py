@@ -40,33 +40,27 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import (EngineConfig, MCEResult, PreparedMCE,
-                               PrepStream, RootBucket,
-                               run_bucket_persistent, run_root)
+                               PrepStream, RootBucket, choose_engine,
+                               estimate_costs, run_bucket_persistent,
+                               run_root)
 from repro.graph.csr import CSRGraph
-from repro.graph.pack import popcount_sum
 from repro.sharding.compat import shard_map
 
 # "truncated" folds each chunk's iters-exhausted flags so a max_iters cutoff
-# surfaces as MCEResult.iters_exhausted instead of silently partial counts
-COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px", "truncated")
+# surfaces as MCEResult.iters_exhausted instead of silently partial counts.
+# "live_iters"/"lane_iters" are the occupancy pair (useful lane-trips vs
+# lane-trip capacity): occupancy = live/lane. The perroot engine's
+# equivalent is Σ per-root iters over max(iters)·lanes — the lock-step vmap
+# runs every lane until the slowest root finishes, which is exactly the
+# idle time the persistent queue reclaims (surfaced per query through
+# MCEService.stats).
+COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px", "truncated",
+                "live_iters", "lane_iters")
 
 
 # ---------------------------------------------------------------------------
-# Cost-balanced root scheduling
+# Cost-balanced root scheduling (cost model lives in engine.prepare)
 # ---------------------------------------------------------------------------
-
-def estimate_costs(bucket: RootBucket) -> np.ndarray:
-    """Per-root cost proxy: |P| * (1 + mean induced degree)^2.
-
-    The BK subtree size grows with local density; this proxy ranks hub-like
-    roots above sparse ones, which is all static balancing needs. Popcounts
-    go through the uint8 LUT (`graph.pack.popcount_sum`) — the previous
-    `np.unpackbits(bucket.a.view(np.uint8))` materialized 32× the bucket's
-    bytes just to sum bits."""
-    p_sizes = np.array([len(u) for u in bucket.universes], dtype=np.float64)
-    pc = popcount_sum(bucket.a, axis=(1, 2)).astype(np.float64)
-    mean_deg = pc / np.maximum(p_sizes, 1)
-    return p_sizes * (1.0 + mean_deg) ** 2
 
 
 def canonical_order(costs: np.ndarray) -> np.ndarray:
@@ -131,13 +125,18 @@ def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
 
     def per_shard(a_s, p_s, xr_s, xa_s, rz_s):
         if engine == "persistent":
+            L = min(lanes, a_s.shape[1])
             out = run_bucket_persistent(
-                a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0], cfg,
-                lanes=min(lanes, a_s.shape[1]))
+                a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0], cfg, lanes=L)
+            out = dict(out, lane_iters=out["iters"] * L)
         else:
             out = jax.vmap(lambda aa, pp, rr, ll, zz: run_root(
                 aa, pp, rr, ll, zz, cfg))(
                 a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0])
+            # lock-step equivalent of the queue's occupancy pair: every
+            # vmap lane spins until the slowest root's DFS exhausts
+            out = dict(out, live_iters=jnp.sum(out["iters"]),
+                       lane_iters=jnp.max(out["iters"]) * a_s.shape[1])
         sums = {k: jnp.sum(out[k]).astype(jnp.int32)[None]
                 for k in COUNTER_KEYS}
         return sums
@@ -225,7 +224,7 @@ class DistributedMCE:
                  streaming: bool = True, stream_roots: int = 1024,
                  prep: Union[PrepStream, PreparedMCE, None] = None,
                  engine: str = "perroot", lanes: int = 64):
-        if engine not in ("perroot", "persistent"):
+        if engine not in ("perroot", "persistent", "auto"):
             raise ValueError(f"unknown engine {engine!r}")
         self.engine = engine
         self.lanes = lanes
@@ -242,7 +241,9 @@ class DistributedMCE:
         self.cfg = cfg
         self.ckpt_path = ckpt_path
         self.stats = {"host_pack_s": 0.0, "host_pack_overlap_s": 0.0,
-                      "dispatch_s": 0.0, "device_wait_s": 0.0, "chunks": 0}
+                      "dispatch_s": 0.0, "device_wait_s": 0.0, "chunks": 0,
+                      "engine_choices": {"perroot": 0, "persistent": 0}}
+        self.last_counters: dict = {}   # COUNTER_KEYS of the last run()
         self.prep: Optional[PreparedMCE] = None
         self.stream: Optional[PrepStream] = None
         if prep is not None and g is not None:
@@ -331,12 +332,25 @@ class DistributedMCE:
             if bucket.cost_order is None:   # memo: cached-bucket replays
                 costs = estimate_costs(bucket)[:total]
                 bucket.cost_order = canonical_order(costs)
+                bucket.cost_skew = (float(costs.max() /
+                                          max(costs.mean(), 1e-12))
+                                    if total else 1.0)
             order = bucket.cost_order
+            eng_b, lanes_b = self.engine, self.lanes
+            if self.engine == "auto":
+                # the skew memo avoids re-deriving costs on cached replays;
+                # the choice is a pure function of the bucket, so replays
+                # and resumes land on the same engine
+                eng_b, lanes_b = choose_engine(skew=bucket.cost_skew,
+                                               n_roots=total,
+                                               lanes=self.lanes)
+                self.stats["engine_choices"][eng_b] += 1
             done = state.roots_done if b == state.bucket else 0
             while done < total:
                 hi = min(done + window, total)
                 t0 = time.perf_counter()
-                handle = self._run_chunk(bucket, order[done:hi])
+                handle = self._run_chunk(bucket, order[done:hi],
+                                         eng_b, lanes_b)
                 dt = time.perf_counter() - t0   # gather/pad/upload: host work
                 self.stats["dispatch_s"] += dt
                 self.stats["host_pack_s"] += dt
@@ -349,6 +363,7 @@ class DistributedMCE:
             self._settle(pending, state)
 
         late = len(self.stream.late_reported) if self.stream is not None else 0
+        self.last_counters = dict(state.counters)
         return MCEResult(cliques=state.counters["cliques"] + late,
                          calls=state.counters["calls"],
                          branches=state.counters["branches"],
@@ -358,9 +373,12 @@ class DistributedMCE:
 
     # ---- chunk pipeline --------------------------------------------------
 
-    def _run_chunk(self, bucket: RootBucket, window: np.ndarray):
+    def _run_chunk(self, bucket: RootBucket, window: np.ndarray,
+                   engine: str, lanes: int):
         """Gather/pad + upload + *asynchronously* dispatch one chunk.
 
+        `engine`/`lanes` are per-bucket: under engine="auto" the driver
+        resolves them from the bucket's cost skew before each chunk.
         Returns (unrealized device counters, n_pad); the caller settles the
         previous chunk after dispatching this one, so host pack/upload of
         chunk k+1 overlaps device execution of chunk k."""
@@ -372,7 +390,7 @@ class DistributedMCE:
         sharding = NamedSharding(self.mesh, P(self.axis))
         a, p0, xr, xa, rz = (jax.device_put(t, sharding) for t in stacked)
         out = _sharded_counts(a, p0, xr, xa, rz, self.cfg, self.mesh,
-                              self.axis, engine=self.engine, lanes=self.lanes)
+                              self.axis, engine=engine, lanes=lanes)
         return out, n_pad
 
     def _settle(self, pending, state: DriverCheckpoint) -> None:

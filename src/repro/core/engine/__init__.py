@@ -17,9 +17,9 @@ All bitset set algebra dispatches through `repro.kernels.bitset_ops.ops`
 thin re-export shim for existing callers.
 """
 from repro.core.engine.frames import EngineConfig, Frame, FrameStack  # noqa: F401
-from repro.core.engine.loop import (MCEResult, dfs_step,  # noqa: F401
-                                    enter_call, run, run_bucket,
+from repro.core.engine.loop import (MCEResult, choose_engine,  # noqa: F401
+                                    dfs_step, enter_call, run, run_bucket,
                                     run_bucket_persistent, run_root)
 from repro.core.engine.pipeline import PrepStream, RootSpec  # noqa: F401
 from repro.core.engine.prepare import (PreparedMCE, RootBucket,  # noqa: F401
-                                       prepare)
+                                       estimate_costs, prepare)

@@ -19,7 +19,8 @@ from repro.core.engine import frames as fr
 from repro.core.engine import pivot as piv
 from repro.core.engine import reductions as red
 from repro.core.engine.frames import U32, WORD, EngineConfig, Frame, FrameStack
-from repro.core.engine.prepare import _unpack_bits_np, prepare
+from repro.core.engine.prepare import (_unpack_bits_np, estimate_costs,
+                                       prepare)
 from repro.graph.csr import CSRGraph
 from repro.kernels.bitset_ops import ops as bitops
 
@@ -317,6 +318,43 @@ def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
 # High-level API
 # ===========================================================================
 
+def choose_engine(costs: Optional[np.ndarray] = None, *, lanes: int = 64,
+                  skew: Optional[float] = None,
+                  n_roots: Optional[int] = None,
+                  skew_threshold: float = 4.0, min_roots: int = 16):
+    """Pick (engine, lanes) for one bucket from its root-cost skew.
+
+    skew = max/mean of the per-root cost proxy (`prepare.estimate_costs`).
+    A uniform bucket (skew < threshold) runs the lock-step per-root vmap:
+    every lane finishes together, so a work queue would add claim overhead
+    and win nothing. A skewed bucket runs the persistent lane-refill
+    queue — that is exactly the regime where lock-step lanes idle behind
+    the one hub root. Lanes are sized so the queue actually refills
+    (>= ~4 roots per lane on average), clamped to [8, lanes]; tiny
+    buckets (< min_roots) stay on perroot where one compile per shape is
+    cheaper than the queue machinery.
+
+    Callers treat explicit engine= flags as overrides; this is only the
+    `engine="auto"` policy, kept in the engine layer so both the
+    single-host `run()` and the distributed driver share it (the driver
+    imports the engine, never the reverse — DESIGN.md §6). Pass
+    `skew=`/`n_roots=` instead of `costs` when the skew is already
+    memoized (the driver caches it on the bucket for cached replays)."""
+    if costs is not None:
+        costs = np.asarray(costs, dtype=np.float64)
+        n_roots = int(costs.size)
+        if n_roots == 0 or float(costs.max()) <= 0.0:
+            return "perroot", lanes
+        skew = float(costs.max()) / max(float(costs.mean()), 1e-12)
+    if skew is None or n_roots is None:
+        return "perroot", lanes
+    if n_roots < min_roots or skew < skew_threshold:
+        return "perroot", lanes
+    per_lane = max(1, n_roots // 4)
+    refill_lanes = 1 << (per_lane.bit_length() - 1)   # largest pow2 <= n/4
+    return "persistent", max(8, min(lanes, refill_lanes))
+
+
 @dataclasses.dataclass
 class MCEResult:
     cliques: int
@@ -327,6 +365,9 @@ class MCEResult:
     enumerated: Optional[List[frozenset]] = None
     overflow: bool = False
     iters_exhausted: bool = False
+    stats: Optional[dict] = None   # service layer: per-query occupancy
+    # counters (live_iters/lane_iters/truncated/engine_choices) — see
+    # launch.mce_service.MCEService
 
 
 def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
@@ -340,8 +381,10 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
 
     `engine='persistent'` routes each bucket through the lane-refill work
     queue (`run_bucket_persistent` with min(lanes, roots) lanes); the
-    default 'perroot' path vmaps one lock-step lane per root."""
-    if engine not in ("perroot", "persistent"):
+    default 'perroot' path vmaps one lock-step lane per root.
+    `engine='auto'` picks per bucket from the root-cost skew
+    (`choose_engine`); the explicit flags remain hard overrides."""
+    if engine not in ("perroot", "persistent", "auto"):
         raise ValueError(f"unknown engine {engine!r}")
     prep = prepare(g, global_red=global_red, x_red=x_red,
                    bucket_sizes=bucket_sizes, max_x_rows=max_x_rows,
@@ -355,9 +398,14 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
         args = (jnp.asarray(bucket.a), jnp.asarray(bucket.p0),
                 jnp.asarray(bucket.x_rows), jnp.asarray(bucket.x_alive0),
                 jnp.asarray(bucket.rsz0))
-        if engine == "persistent":
+        eng_b, lanes_b = engine, lanes
+        if engine == "auto":
+            total_real = bucket.num_roots - bucket.n_pad
+            eng_b, lanes_b = choose_engine(
+                estimate_costs(bucket)[:total_real], lanes=lanes)
+        if eng_b == "persistent":
             out = run_bucket_persistent(*args, cfg,
-                                        lanes=min(lanes, bucket.num_roots))
+                                        lanes=min(lanes_b, bucket.num_roots))
         else:
             out = run_bucket(*args, cfg)
         out = jax.tree.map(np.asarray, out)
@@ -369,7 +417,7 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
         total.iters_exhausted |= bool(out["truncated"].any())
         if enumerate_cliques:
             total.overflow |= bool(out["overflow"].any())
-            if engine == "persistent":
+            if eng_b == "persistent":
                 # lanes interleave roots; out_root maps each clique back
                 for l in range(out["out_n"].shape[0]):
                     for k in range(int(out["out_n"][l])):

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.graph.pack import pack_bits as _pack_bits  # noqa: F401 (legacy name)
+from repro.graph.pack import popcount_sum
 
 WORD = 32
 
@@ -36,6 +37,9 @@ class RootBucket:
     cost_order: Optional[np.ndarray] = None   # driver memo: canonical
     # cost-descending root order — cached so service-style replays of a
     # cached bucket skip the O(packed bytes) cost rescan
+    cost_skew: Optional[float] = None  # driver memo: max/mean of the real
+    # (unpadded) root costs — the engine="auto" signal, cached with
+    # cost_order for the same replay reason
     n_pad: int = 0                  # trailing no-op pad roots (remainder
     # flushes padded to pow2 fractions of stream_roots; each contributes
     # exactly one engine call and nothing else — callers subtract)
@@ -43,6 +47,20 @@ class RootBucket:
     @property
     def num_roots(self) -> int:
         return len(self.roots)
+
+
+def estimate_costs(bucket: RootBucket) -> np.ndarray:
+    """Per-root cost proxy: |P| * (1 + mean induced degree)^2.
+
+    The BK subtree size grows with local density; this proxy ranks hub-like
+    roots above sparse ones, which is all static balancing needs. Popcounts
+    go through the uint8 LUT (`graph.pack.popcount_sum`) — the previous
+    `np.unpackbits(bucket.a.view(np.uint8))` materialized 32× the bucket's
+    bytes just to sum bits."""
+    p_sizes = np.array([len(u) for u in bucket.universes], dtype=np.float64)
+    pc = popcount_sum(bucket.a, axis=(1, 2)).astype(np.float64)
+    mean_deg = pc / np.maximum(p_sizes, 1)
+    return p_sizes * (1.0 + mean_deg) ** 2
 
 
 @dataclasses.dataclass

@@ -72,6 +72,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ki == pl.num_programs(2) - 1)
     def _finish():
+        # mce-lint: disable=R2 -- epilogue on the sequential kv grid axis 2: one write per output block from VMEM scratch; batch*heads ride grid axis 0, kernel is never vmapped
         o_ref[0] = (acc_ref[...]
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 

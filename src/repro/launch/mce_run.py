@@ -4,6 +4,18 @@ Usage:
   python -m repro.launch.mce_run --graph ba:n=2000,m=6 --backend pivot
   python -m repro.launch.mce_run --graph rgg:n=5000 --no-global-red
   python -m repro.launch.mce_run --graph er:n=300,p=0.2 --ckpt /tmp/mce.json
+  python -m repro.launch.mce_run --graph ba:n=5000,m=8 --engine auto
+
+Before shipping changes to anything this launcher dispatches (driver,
+engine, kernels), run the repo's static analyzer — it catches the bug
+classes this codebase has actually shipped (vmap-unsafe kernel
+accumulators, tracer leaks into Python control flow, donation
+use-after-free, layering violations):
+
+  PYTHONPATH=src python -m repro.analysis src/repro --strict
+
+(or `mce_lint src/repro --strict` once installed). See DESIGN.md §7 for
+the rule families and the suppression syntax.
 """
 from __future__ import annotations
 
@@ -70,11 +82,12 @@ def main() -> None:
                     help="streamed bucket flush size (part of the elastic "
                          "schedule identity — keep it fixed across restarts)")
     ap.add_argument("--split-threshold", type=int, default=None)
-    ap.add_argument("--engine", choices=("perroot", "persistent"),
+    ap.add_argument("--engine", choices=("perroot", "persistent", "auto"),
                     default="perroot",
                     help="perroot: lock-step vmap over chunk roots; "
                          "persistent: lane-refill work queue (one while_loop "
-                         "per shard, exhausted lanes claim the next root)")
+                         "per shard, exhausted lanes claim the next root); "
+                         "auto: per-bucket choice from the root-cost skew")
     ap.add_argument("--lanes", type=int, default=64,
                     help="persistent engine: resident DFS lanes per shard")
     args = ap.parse_args()
@@ -109,6 +122,12 @@ def main() -> None:
           f"device_wait {drv.stats['device_wait_s']:.2f}s  "
           f"host_pack {drv.stats['host_pack_s']:.2f}s "
           f"(overlapped {100 * drv.overlap_fraction:.0f}%)")
+    if args.engine == "auto":
+        print(f"engine choices: {drv.stats['engine_choices']}")
+    lc = drv.last_counters
+    if lc.get("lane_iters"):
+        print(f"lane occupancy: {lc['live_iters'] / lc['lane_iters']:.2f} "
+              f"(live {lc['live_iters']} / capacity {lc['lane_iters']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""R1 bad fixture: the PR-1 dead-kernel import plus an upward import.
+
+These files are parsed by mce_lint, never imported by python — the
+`bad_r1.*` modules do not exist at runtime.
+"""
+from bad_r1.kernels.bitset_ops import ref as bitref     # EXPECT-R1
+from ...kernels.bitset_ops import kernel as _k          # EXPECT-R1
+from bad_r1.core.driver import DistributedMCE           # EXPECT-R1
+
+
+def expand(rows, mask):
+    _ = DistributedMCE
+    return _k.and_popcount_rows(rows, mask) + bitref.and_popcount_rows(
+        rows, mask)

@@ -1,0 +1,8 @@
+"""R1 bad fixture: graph/ reaching upward into core/."""
+import numpy as np
+
+from bad_r1.core.driver import estimate_costs           # EXPECT-R1
+
+
+def order(adj):
+    return np.argsort(estimate_costs(adj))

@@ -1,0 +1,27 @@
+"""R3 bad fixture: integer-axis reduction + misaligned literal BlockSpec.
+
+Mosaic rejects integer-dtype axis reductions (`jnp.sum` on the int32
+popcount output) and block shapes whose trailing dims are neither
+(8, 128)-multiples nor equal to the array dims.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _degree_kernel(rows_ref, mask_ref, deg_ref):
+    anded = rows_ref[...] & mask_ref[...]
+    pc = jax.lax.population_count(anded)
+    deg_ref[...] = jnp.sum(pc, axis=1, keepdims=True)       # EXPECT-R3
+
+
+def degrees(rows, mask):
+    k, w = rows.shape
+    return pl.pallas_call(
+        _degree_kernel,
+        grid=(k // 8,),
+        in_specs=[pl.BlockSpec((8, 120), lambda i: (i, 0)),  # EXPECT-R3
+                  pl.BlockSpec((1, w), lambda i: (0, 0))],
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.int32),
+        out_specs=pl.BlockSpec((8, 1), lambda i: (i, 0)),
+    )(rows, mask)

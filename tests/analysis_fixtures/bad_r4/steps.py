@@ -1,0 +1,24 @@
+"""R4 bad fixture: host round-trips on traced values inside jitted code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x, y):
+    if x > 0:                                               # EXPECT-R4
+        y = y + 1
+    n = int(jnp.sum(y))                                     # EXPECT-R4
+    return x * n
+
+
+def _cond(c):
+    return c[0] < 8
+
+
+def _body(c):
+    i, s = c
+    return (i + 1, s + float(s.sum()))                      # EXPECT-R4
+
+
+def loop(x):
+    return jax.lax.while_loop(_cond, _body, (0, x))

@@ -1,0 +1,21 @@
+"""R5 bad fixture: donated buffers read after the donating call."""
+import jax
+
+
+def _step_impl(buf, n):
+    return buf * n
+
+
+step = jax.jit(_step_impl, donate_argnums=(0,))
+
+
+def run(buf, n):
+    out = step(buf, n)                                      # EXPECT-R5
+    return out + buf.sum()
+
+
+def run_loop(buf, n):
+    out = buf
+    for _ in range(n):
+        out = step(buf, 2)                                  # EXPECT-R5
+    return out

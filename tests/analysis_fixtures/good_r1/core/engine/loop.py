@@ -1,0 +1,6 @@
+"""R1 good twin: all set algebra through the ops dispatch layer."""
+from good_r1.kernels.bitset_ops import ops as bitops
+
+
+def expand(rows, mask):
+    return bitops.and_popcount_rows(rows, mask)

@@ -1,0 +1,8 @@
+"""R1 good twin: graph/ uses numpy and graph siblings only."""
+import numpy as np
+
+from good_r1.graph import adjacency
+
+
+def order(g):
+    return np.argsort(adjacency.degrees(g))

@@ -1,0 +1,22 @@
+"""R3 good twin: f32 accumulation (exact below 2^24) + aligned blocks."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _degree_kernel(rows_ref, mask_ref, deg_ref):
+    anded = rows_ref[...] & mask_ref[...]
+    pc = jax.lax.population_count(anded).astype(jnp.float32)
+    deg_ref[...] = jnp.sum(pc, axis=1, keepdims=True).astype(jnp.int32)
+
+
+def degrees(rows, mask):
+    k, w = rows.shape
+    return pl.pallas_call(
+        _degree_kernel,
+        grid=(k // 8,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0)),
+                  pl.BlockSpec((1, w), lambda i: (0, 0))],
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.int32),
+        out_specs=pl.BlockSpec((8, 1), lambda i: (i, 0)),
+    )(rows, mask)

@@ -1,0 +1,23 @@
+"""R4 good twin: static args, shape tests, and on-device control flow."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def step(x, y, scale=2):
+    if scale > 1:                  # static_argnames: concrete at trace time
+        y = y * scale
+    if x.shape[0] > 4:             # shapes are static under trace
+        y = y[:4]
+    return jnp.where(x[:4] > 0, y, 0.0)
+
+
+def _body(c):
+    i, s = c
+    return (i + 1, s + jnp.sum(s))
+
+
+def loop(x):
+    return jax.lax.while_loop(lambda c: c[0] < 8, _body, (0, x))

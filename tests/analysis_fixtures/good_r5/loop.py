@@ -1,0 +1,20 @@
+"""R5 good twin: donate-and-rebind — the double-buffered driver idiom."""
+import jax
+
+
+def _step_impl(buf, n):
+    return buf * n
+
+
+step = jax.jit(_step_impl, donate_argnums=(0,))
+
+
+def run(buf, n):
+    buf = step(buf, n)             # rebind over the donated name: safe
+    return buf.sum()
+
+
+def run_loop(buf, n):
+    for _ in range(n):
+        buf = step(buf, 2)         # loop-carried rebind: safe
+    return buf

@@ -1,58 +1,91 @@
 """Architecture lint: the layered engine + single kernel-dispatch choke point.
 
-Guards the refactor's contracts (DESIGN.md §2–§3):
-  * no module outside `kernels/bitset_ops` imports `ref`/`kernel` directly —
-    all bitset set algebra dispatches through `ops` (the dead-kernel bug
-    this rule prevents: the engine importing the jnp ref and silently never
-    using the Pallas TPU path);
-  * `core/engine/` holds the layered modules;
-  * `core/bitset_engine.py` stays a thin re-export shim.
+Guards the refactor's contracts (DESIGN.md §2–§3, §6). The layering
+rules themselves now live ONCE, declaratively, in
+`repro.analysis.layering.LAYERS`; these tests invoke the R1 rule engine
+(AST-resolved imports — no regex false positives on docstrings, no
+misses on aliased imports) and keep the structural checks that are about
+file layout rather than imports.
 """
 import os
-import re
+import textwrap
 
 import pytest
 
+from repro.analysis import layering
+from repro.analysis.modindex import PackageIndex
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 
-_FORBIDDEN = [
-    # from repro.kernels.bitset_ops import ref / kernel (any alias/combo)
-    re.compile(r"from\s+repro\.kernels\.bitset_ops\s+import\s+"
-               r"[^\n]*\b(ref|kernel)\b"),
-    re.compile(r"from\s+repro\.kernels\.bitset_ops\.(ref|kernel)\s+import"),
-    re.compile(r"import\s+repro\.kernels\.bitset_ops\.(ref|kernel)\b"),
-]
 
-
-def _py_files():
-    for dirpath, _dirnames, filenames in os.walk(SRC):
-        if os.path.join("kernels", "bitset_ops") in dirpath:
-            continue          # the package itself may wire ref/kernel to ops
-        for name in filenames:
-            if name.endswith(".py"):
-                yield os.path.join(dirpath, name)
+def _findings(root=SRC, package=None):
+    index = PackageIndex.build(root, package=package)
+    return layering.check(index)
 
 
 def test_no_direct_ref_or_kernel_imports():
-    offenders = []
-    for path in _py_files():
-        with open(path) as f:
-            text = f.read()
-        for pat in _FORBIDDEN:
-            if pat.search(text):
-                offenders.append(os.path.relpath(path, SRC))
-                break
+    offenders = [f.format() for f in _findings()
+                 if "kernel-privates" in f.message]
     assert not offenders, (
         f"modules importing bitset_ops ref/kernel directly (must go through "
         f"bitset_ops.ops): {offenders}")
 
 
-def test_lint_catches_the_original_bug():
-    """The regex must flag the exact import the dead-kernel bug used."""
-    bad = "from repro.kernels.bitset_ops import ref as bitref\n"
-    assert any(p.search(bad) for p in _FORBIDDEN)
-    good = "from repro.kernels.bitset_ops import ops as bitops\n"
-    assert not any(p.search(good) for p in _FORBIDDEN)
+def test_repo_tree_is_layer_clean():
+    """The full declarative layer table holds on the real tree."""
+    offenders = [f.format() for f in _findings()]
+    assert not offenders, f"layering violations: {offenders}"
+
+
+def test_lint_catches_the_original_bug(tmp_path):
+    """The R1 AST rule must flag the exact import the dead-kernel bug used
+    (PR 1: `from repro.kernels.bitset_ops import ref` in the engine made
+    the Pallas TPU kernel dead code on the hot path)."""
+    pkg = tmp_path / "repro"
+    eng = pkg / "core" / "engine"
+    eng.mkdir(parents=True)
+    (eng / "loop.py").write_text(textwrap.dedent("""\
+        from repro.kernels.bitset_ops import ref as bitref
+
+        def expand(rows, mask):
+            return bitref.and_popcount_rows(rows, mask)
+        """))
+    bad = _findings(str(pkg))
+    assert len(bad) == 1 and bad[0].rule == "R1"
+    assert bad[0].line == 1
+    assert "repro.kernels.bitset_ops.ref" in bad[0].message
+
+    # aliasing and relative form cannot hide the import from the AST walker
+    (eng / "loop.py").write_text(
+        "from ...kernels.bitset_ops import kernel as k\n")
+    assert [f.line for f in _findings(str(pkg))] == [1]
+
+    # the blessed dispatch import stays clean
+    (eng / "loop.py").write_text(
+        "from repro.kernels.bitset_ops import ops as bitops\n")
+    assert _findings(str(pkg)) == []
+
+
+def test_layer_table_covers_the_design_contracts():
+    """DESIGN.md §3/§6 contracts each live in the declarative table."""
+    names = {r.name for r in layering.LAYERS}
+    assert {"kernel-privates", "graph-purity", "engine-no-upward",
+            "driver-no-launch"} <= names
+    by_name = {r.name: r for r in layering.LAYERS}
+    assert "repro.launch" in by_name["driver-no-launch"].forbid
+    assert "repro.core.driver" in by_name["engine-no-upward"].forbid
+    assert by_name["graph-purity"].allow_only == ("repro.graph",)
+
+
+def test_ingest_pipeline_layering():
+    """Ingest layers import strictly downward (DESIGN.md §6): graph/ ->
+    numpy + siblings only; core/engine/ -> never driver or launch;
+    core/driver.py -> never launch. Enforced by the R1 engine."""
+    offenders = [f.format() for f in _findings()
+                 if any(k in f.message for k in
+                        ("graph-purity", "engine-no-upward",
+                         "driver-no-launch"))]
+    assert not offenders, f"upward imports: {offenders}"
 
 
 def test_engine_package_layout():
@@ -62,40 +95,6 @@ def test_engine_package_layout():
         assert os.path.isfile(os.path.join(pkg, mod)), f"missing engine/{mod}"
     assert os.path.isfile(os.path.join(SRC, "graph", "pack.py")), \
         "vectorized packer must live in the graph layer"
-
-
-def _imports_of(path):
-    with open(path) as f:
-        text = f.read()
-    return re.findall(r"^\s*(?:from|import)\s+(repro\.[\w.]+)", text,
-                      flags=re.M)
-
-
-def test_ingest_pipeline_layering():
-    """Ingest layers import strictly downward (DESIGN.md §6).
-
-    graph/  -> numpy + graph siblings only (no core, kernels, launch);
-    core/engine/ -> never the driver or launch (the driver consumes the
-    stream, not the other way around);
-    core/driver.py -> never launch.
-    """
-    graph_dir = os.path.join(SRC, "graph")
-    for name in os.listdir(graph_dir):
-        if not name.endswith(".py"):
-            continue
-        for imp in _imports_of(os.path.join(graph_dir, name)):
-            assert imp.startswith("repro.graph"), \
-                f"graph/{name} imports upward: {imp}"
-    eng_dir = os.path.join(SRC, "core", "engine")
-    for name in os.listdir(eng_dir):
-        if not name.endswith(".py"):
-            continue
-        for imp in _imports_of(os.path.join(eng_dir, name)):
-            assert not imp.startswith(("repro.core.driver", "repro.launch")), \
-                f"engine/{name} imports upward: {imp}"
-    for imp in _imports_of(os.path.join(SRC, "core", "driver.py")):
-        assert not imp.startswith("repro.launch"), \
-            f"driver imports upward: {imp}"
 
 
 def test_prepare_is_a_thin_wrapper_over_the_pipeline():

@@ -17,8 +17,10 @@ import pytest
 
 from repro.core import oracle
 from repro.core.driver import DistributedMCE
-from repro.core.engine import (EngineConfig, PrepStream, prepare, run,
-                               run_bucket, run_bucket_persistent)
+from repro.core.engine import (EngineConfig, PrepStream, choose_engine,
+                               estimate_costs, prepare, run, run_bucket,
+                               run_bucket_persistent)
+from repro.launch.mce_service import MCEService
 from repro.graph import generators as gen
 from repro.graph.csr import from_edge_list
 
@@ -191,6 +193,112 @@ def test_driver_persistent_matches_perroot():
                          engine="persistent", lanes=16).run()
     assert (res.cliques, res.calls, res.branches, res.sum_px) == \
            (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+
+
+# ---------------------------------------------------------------------------
+# engine="auto": per-bucket choice from root-cost skew
+# ---------------------------------------------------------------------------
+
+def test_choose_engine_policy():
+    uniform = np.full(64, 10.0)
+    assert choose_engine(uniform) == ("perroot", 64)
+    skewed = np.array([1000.0] + [1.0] * 63)
+    eng, lanes = choose_engine(skewed, lanes=64)
+    assert eng == "persistent"
+    assert lanes == 16          # largest pow2 <= 64/4, floor 8, cap 64
+    assert lanes & (lanes - 1) == 0
+    # tiny buckets stay lock-step regardless of skew
+    assert choose_engine(np.array([99.0, 1.0, 1.0]))[0] == "perroot"
+    # the memoized-skew path must agree with the costs path
+    skew = float(skewed.max() / skewed.mean())
+    assert choose_engine(skew=skew, n_roots=64, lanes=64) == (eng, lanes)
+    # degenerate inputs fall back to lock-step
+    assert choose_engine(np.zeros(0))[0] == "perroot"
+    assert choose_engine(skew=None, n_roots=None)[0] == "perroot"
+
+
+def test_auto_picks_persistent_on_skewed_bucket():
+    g = skewed_graph()
+    prep = prepare(g, bucket_sizes=(64,))
+    for b in prep.buckets:
+        costs = estimate_costs(b)[:b.num_roots - b.n_pad]
+        if costs.size and float(costs.max() / costs.mean()) >= 4.0:
+            break
+    else:
+        pytest.fail("skewed_graph produced no skewed bucket")
+    assert choose_engine(costs)[0] == "persistent"
+
+
+def test_auto_matches_explicit_engines_on_skewed_graph():
+    """Parity: auto must reproduce the explicit engines' counters exactly
+    on the skewed-root fixture — the choice only moves work between
+    equivalent execution strategies."""
+    g = skewed_graph()
+    ref = run(g, bucket_sizes=(64,), engine="perroot")
+    res = run(g, bucket_sizes=(64,), engine="auto", lanes=16)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    assert res.cliques == len(oracle.bk_pivot(g))
+
+
+def test_driver_auto_matches_explicit_and_records_choices():
+    g = skewed_graph()
+    ref = DistributedMCE(g, chunk=64, stream_roots=128).run()
+    drv = DistributedMCE(g, chunk=64, stream_roots=128,
+                         engine="auto", lanes=16)
+    res = drv.run()
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    picks = drv.stats["engine_choices"]
+    assert picks["perroot"] + picks["persistent"] > 0
+    assert picks["persistent"] > 0     # the hub bucket must trip the queue
+
+
+def test_explicit_engine_flag_overrides_auto_policy():
+    """engine='perroot'/'persistent' are hard overrides: no auto choice
+    is recorded and every chunk runs the requested engine."""
+    g = skewed_graph()
+    drv = DistributedMCE(g, chunk=64, stream_roots=128, engine="perroot")
+    drv.run()
+    assert drv.stats["engine_choices"] == {"perroot": 0, "persistent": 0}
+
+
+# ---------------------------------------------------------------------------
+# MCEService occupancy stats (satellite: lane occupancy + truncation
+# counters accumulate across cached-bucket replays)
+# ---------------------------------------------------------------------------
+
+def test_service_stats_accumulate_across_cached_replays():
+    g = gen.barabasi_albert(200, 4, seed=11)
+    svc = MCEService(g, chunk=64, stream_roots=64)
+    r1 = svc.query()
+    after_one = {k: svc.stats[k]
+                 for k in ("live_iters", "lane_iters", "truncated")}
+    assert r1.stats["live_iters"] == after_one["live_iters"]
+    assert after_one["live_iters"] > 0
+    assert after_one["lane_iters"] >= after_one["live_iters"]
+    assert after_one["truncated"] == 0
+    r2 = svc.query()                       # replays the CACHED buckets
+    assert r2.cliques == r1.cliques
+    # identical packed buckets -> identical per-query counters, so the
+    # service totals are exactly double after the cached replay
+    for k, v in after_one.items():
+        assert svc.stats[k] == 2 * v, k
+    assert 0.0 < svc.occupancy() <= 1.0
+    assert svc.queries == 2
+
+
+def test_service_persistent_engine_occupancy_and_choice_counters():
+    g = skewed_graph()
+    svc = MCEService(g, chunk=64, stream_roots=128, engine="auto", lanes=16)
+    res = svc.query()
+    assert res.cliques == len(oracle.bk_pivot(g))
+    assert svc.stats["engine_choices"]["persistent"] > 0
+    assert 0.0 < svc.occupancy() <= 1.0
+    # per-query override beats the service default
+    res2 = svc.query(engine="perroot")
+    assert res2.cliques == res.cliques
+    assert res2.stats["engine_choices"] == {"perroot": 0, "persistent": 0}
 
 
 def run_py(code: str, devices: int, timeout: int = 560) -> str:
