@@ -13,17 +13,18 @@ Workload: a sparse BA graph with one planted dense blob (`--blob`,
 share one queue. `split_threshold` is intentionally unset: the hub staying
 unsplit is the lock-step worst case this engine exists for.
 
-Emits BENCH_engine.json:
+Emits BENCH_engine.json (last run at top level + full history under
+"runs" — see benchmarks/bench_record.py):
   {graph, n, m, roots, iters_total, iters_hub,
    lockstep_s, persistent_s, speedup,
-   lockstep_occupancy, persistent_occupancy, lanes, chunk}
+   lockstep_occupancy, persistent_occupancy, lanes, chunk,
+   runs: [{commit, date, ...same metrics}, ...]}
 
   PYTHONPATH=src python -m benchmarks.perf_engine --out BENCH_engine.json
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax.numpy as jnp
@@ -142,8 +143,8 @@ def run(n: int = 4000, m: int = 8, blob: int = 40, blob_p: float = 0.6,
           f"(lanes={lanes})", flush=True)
     print(f"speedup: {speedup:.2f}x", flush=True)
     if out_json:
-        with open(out_json, "w") as f:
-            json.dump(row, f, indent=1)
+        from benchmarks.bench_record import append_run
+        append_run(out_json, row)   # appends to "runs", keeps top-level compat
     return row
 
 

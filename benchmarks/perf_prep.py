@@ -18,7 +18,6 @@ Emits BENCH_prep.json:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -332,8 +331,8 @@ def run(graph_desc: str = "ba:n=20000,m=8",
                device_wait_s=drv.stats["device_wait_s"])
     print(f"host-prep speedup: {speedup:.1f}x", flush=True)
     if out_json:
-        with open(out_json, "w") as f:
-            json.dump(row, f, indent=1)
+        from benchmarks.bench_record import append_run
+        append_run(out_json, row)   # appends to "runs", keeps top-level compat
     return row
 
 

@@ -1,10 +1,23 @@
-"""Paper Table 3: ablation — disable one reduction at a time.
+"""Paper Table 3: ablation — disable one reduction at a time — plus the
+branch-policy ablation (ISSUE 8): backend='pivot' vs backend='hybrid'.
 
-Variant1 = no global reduction, Variant2 = no dynamic reduction,
-Variant3 = no maximality-check reduction. Times from the bitset engine
-(jit-warmed, best of 2).
+Reduction ablation (default, `main()`): Variant1 = no global reduction,
+Variant2 = no dynamic reduction, Variant3 = no maximality-check reduction.
+Times from the bitset engine (jit-warmed, best of 2).
+
+Branch-policy ablation (`--branching`): pivot vs hybrid branching over the
+er/ba/caveman members of the graph suite × dynamic reduction on/off,
+recording the tree-size counters (calls / branches / sum_px) and
+wall-clock. Exact clique-count parity is asserted per config; the result —
+including the best calls reduction, the acceptance criterion — is appended
+to BENCH_branching.json (see benchmarks/bench_record.py for the schema).
+
+  PYTHONPATH=src python -m benchmarks.table3_ablation --branching \
+      --out BENCH_branching.json
 """
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import GRAPH_SUITE, Csv, timed
 from repro.core import engine as bitset_engine
@@ -15,6 +28,13 @@ VARIANTS = [
     ("Variant2_noDynamic", dict(global_red=True, dynamic_red=False, x_red=True)),
     ("Variant3_noXred", dict(global_red=True, dynamic_red=True, x_red=False)),
 ]
+
+# er/ba/caveman slice of the suite for the branch-policy ablation: the
+# regimes where hybrid's two checks behave differently (sparse uniform —
+# little to terminate early; power law — mixed; community cliques — the
+# early-termination showcase).
+BRANCH_GRAPHS = [(name, make) for name, make, _ in GRAPH_SUITE
+                 if name in ("er_sparse", "ba_web", "caveman_comm")]
 
 
 def main(fast: bool = False) -> str:
@@ -35,5 +55,69 @@ def main(fast: bool = False) -> str:
     return csv.dump("table3: ablation — one reduction disabled at a time")
 
 
+def branching(out_json: str | None = "BENCH_branching.json") -> dict:
+    """pivot vs hybrid: tree-size counters + wall-clock, parity asserted.
+
+    With dynamic reduction ON, Lemma 8 already absorbs clique-P nodes, so
+    hybrid's margin there comes from X-domination pruning alone; the
+    dynamic_red=False rows isolate the full early-termination effect (on
+    caveman a pivot walk strips a community clique one vertex per call,
+    hybrid emits it in one)."""
+    rows = []
+    best = None
+    for name, make in BRANCH_GRAPHS:
+        g = make()
+        for dyn in (True, False):
+            per = {}
+            for backend in ("pivot", "hybrid"):
+                kw = dict(backend=backend, dynamic_red=dyn,
+                          bucket_sizes=(32, 64, 128, 256))
+                bitset_engine.run(g, **kw)                         # warm
+                t, r = timed(bitset_engine.run, g, repeat=2, **kw)
+                per[backend] = (t, r)
+            (tp, rp), (th, rh) = per["pivot"], per["hybrid"]
+            assert rp.cliques == rh.cliques, \
+                f"clique parity broken on {name} dyn={dyn}: " \
+                f"{rp.cliques} vs {rh.cliques}"
+            # 0 pivot calls = the graph dissolved in reductions; nothing
+            # for branching to reduce, so report 0, not a vacuous 100%.
+            redn = 1.0 - rh.calls / rp.calls if rp.calls else 0.0
+            row = dict(graph=name, dynamic_red=dyn, cliques=rp.cliques,
+                       pivot_calls=rp.calls, hybrid_calls=rh.calls,
+                       pivot_branches=rp.branches,
+                       hybrid_branches=rh.branches,
+                       pivot_sum_px=rp.sum_px, hybrid_sum_px=rh.sum_px,
+                       pivot_s=tp, hybrid_s=th, calls_reduction=redn)
+            rows.append(row)
+            print(f"{name:14s} dyn={int(dyn)} calls {rp.calls:>6d} -> "
+                  f"{rh.calls:>6d} ({redn:+.0%})  "
+                  f"time {tp:.2f}s -> {th:.2f}s  cliques={rp.cliques}",
+                  flush=True)
+            if best is None or redn > best["calls_reduction"]:
+                best = row
+    doc = dict(best_graph=best["graph"],
+               best_dynamic_red=best["dynamic_red"],
+               best_calls_reduction=best["calls_reduction"],
+               ablation=rows)
+    print(f"best calls reduction: {doc['best_calls_reduction']:.0%} on "
+          f"{doc['best_graph']} (dynamic_red={doc['best_dynamic_red']})")
+    if out_json:
+        from benchmarks.bench_record import append_run
+        append_run(out_json, doc)
+    return doc
+
+
 if __name__ == "__main__":
-    print(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--branching", action="store_true",
+                    help="run the pivot-vs-hybrid branch-policy ablation "
+                         "instead of the reduction table")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduction table only: first 4 suite graphs")
+    ap.add_argument("--out", default="BENCH_branching.json",
+                    help="--branching: BENCH json to append the run to")
+    args = ap.parse_args()
+    if args.branching:
+        branching(args.out)
+    else:
+        print(main(args.fast))

@@ -39,9 +39,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.engine import (EngineConfig, MCEResult, PreparedMCE,
-                               PrepStream, RootBucket, choose_engine,
-                               estimate_costs, run_bucket_persistent,
+from repro.core.engine import (BACKENDS, EngineConfig, MCEResult,
+                               PreparedMCE, PrepStream, RootBucket,
+                               choose_engine, estimate_costs,
+                               root_cost_skew, run_bucket_persistent,
                                run_root)
 from repro.graph.csr import CSRGraph
 from repro.sharding.compat import shard_map
@@ -226,6 +227,9 @@ class DistributedMCE:
                  engine: str = "perroot", lanes: int = 64):
         if engine not in ("perroot", "persistent", "auto"):
             raise ValueError(f"unknown engine {engine!r}")
+        if cfg.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {cfg.backend!r} "
+                             f"(expected one of {BACKENDS})")
         self.engine = engine
         self.lanes = lanes
         if mesh is None:
@@ -332,9 +336,10 @@ class DistributedMCE:
             if bucket.cost_order is None:   # memo: cached-bucket replays
                 costs = estimate_costs(bucket)[:total]
                 bucket.cost_order = canonical_order(costs)
-                bucket.cost_skew = (float(costs.max() /
-                                          max(costs.mean(), 1e-12))
-                                    if total else 1.0)
+                # same hardened skew as choose_engine's costs= path, so
+                # memoized replays and fresh runs can't diverge (and an
+                # all-zero/degenerate proxy can't explode to max/1e-12)
+                bucket.cost_skew = (root_cost_skew(costs) if total else 1.0)
             order = bucket.cost_order
             eng_b, lanes_b = self.engine, self.lanes
             if self.engine == "auto":

@@ -16,10 +16,12 @@ All bitset set algebra dispatches through `repro.kernels.bitset_ops.ops`
 73.6%-of-time set intersections. `repro.core.bitset_engine` remains as a
 thin re-export shim for existing callers.
 """
-from repro.core.engine.frames import EngineConfig, Frame, FrameStack  # noqa: F401
+from repro.core.engine.frames import (BACKENDS, EngineConfig,  # noqa: F401
+                                      Frame, FrameStack, PIVOT_BACKENDS)
 from repro.core.engine.loop import (MCEResult, choose_engine,  # noqa: F401
-                                    dfs_step, enter_call, run, run_bucket,
-                                    run_bucket_persistent, run_root)
+                                    dfs_step, enter_call, root_cost_skew,
+                                    run, run_bucket, run_bucket_persistent,
+                                    run_root)
 from repro.core.engine.pipeline import PrepStream, RootSpec  # noqa: F401
 from repro.core.engine.prepare import (PreparedMCE, RootBucket,  # noqa: F401
                                        estimate_costs, prepare)

@@ -91,16 +91,28 @@ def single_bit_index_rows(rows):
 # Engine configuration
 # ===========================================================================
 
+BACKENDS = ("pivot", "rcd", "revised", "hybrid")
+# Backends that precompute a branch set B at call entry ('rcd' re-selects
+# per visit instead); 'hybrid' is pivot-family with a per-node
+# vertex-branching override plus early termination (DESIGN.md §2.7).
+PIVOT_BACKENDS = ("pivot", "revised", "hybrid")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     dynamic_red: bool = True
-    backend: str = "pivot"          # 'pivot' | 'rcd' | 'revised'
+    backend: str = "pivot"          # one of BACKENDS
     out_cap: int = 0                # >0: enumerate into a fixed buffer
     max_iters: int = 1 << 30
     # §Perf: reuse the post-reduction degree vector for pivot scoring via
     # deg_P''(u) = deg_P'(u) − |full| (full vertices neighbor all of P'),
     # eliminating one of the three AND+popcount sweeps over A per call.
     reuse_degrees: bool = True
+    # 'hybrid' branch selection: switch from pivot- to vertex-branching
+    # (B = P) when the induced density 2|E[P]| / (|P|·(|P|−1)) reaches this
+    # threshold — near-clique nodes early-terminate in their children, so
+    # the pivot sweep's pruning buys nothing there (DESIGN.md §2.7).
+    hybrid_density: float = 0.9
 
 
 # ===========================================================================

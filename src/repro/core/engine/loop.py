@@ -63,8 +63,18 @@ def enter_call(carry, cfg, ctx: fr.RootContext, P, Xp, xal, rsz, Rb,
                              p_empty & x_empty & (rsz >= 2) & enable)
     push = ~p_empty & enable
 
+    # ---- hybrid early termination + X-domination pruning (§2.7) ----
+    if cfg.backend == "hybrid":
+        # P a clique -> report R ∪ P and pop; P dominated by a forbidden
+        # vertex -> pop silently. Reports are gated by `enable`, so every
+        # dispatch path (run_root vmap, persistent refill/lane step) gets
+        # the live-mask gating for free.
+        carry, stop = piv.hybrid_early_term(carry, cfg, ctx, P, Xp, xal,
+                                            Rb, rsz, enable)
+        push = push & ~stop
+
     # ---- branch set (pivot backends; rcd recomputes per visit) ----
-    if cfg.backend in ("pivot", "revised"):
+    if cfg.backend in fr.PIVOT_BACKENDS:
         B = piv.branch_set(cfg, ctx, P, Xp, xal, rf,
                            deg=None if pre is None else pre[0])
     else:
@@ -98,7 +108,7 @@ def dfs_step(cfg, ctx: fr.RootContext, depth, stack, carry, live=None):
     d = depth if live is None else jnp.maximum(depth, 0)
     f = stack.read(d)
 
-    if cfg.backend in ("pivot", "revised"):
+    if cfg.backend in fr.PIVOT_BACKENDS:
         has_branch = fr.any_bit(f.B) & lv
         w = fr.first_bit_index(f.B)
     else:
@@ -132,7 +142,7 @@ def dfs_step(cfg, ctx: fr.RootContext, depth, stack, carry, live=None):
     # P \ w, X ∪ w, B \ w
     cur = dict(P=jnp.where(has_branch, f.P & ~wbit, f.P),
                Xp=jnp.where(has_branch, f.Xp | wbit, f.Xp))
-    if cfg.backend in ("pivot", "revised"):
+    if cfg.backend in fr.PIVOT_BACKENDS:
         cur["B"] = jnp.where(has_branch, f.B & ~wbit, f.B)
     stack = stack.write(d, **cur)
     # write child frame (slot depth+1 is dead unless pushed)
@@ -318,6 +328,28 @@ def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
 # High-level API
 # ===========================================================================
 
+def root_cost_skew(costs) -> float:
+    """max/mean skew of a per-root cost proxy, hardened for edge buckets.
+
+    Degenerate inputs (empty, all-zero/all-pad, NaN/inf costs) answer 1.0
+    — "uniform", which routes to perroot downstream — instead of crashing
+    on a length-0 max or exploding to max/1e-12 on an all-but-zero mean.
+    The skew is clamped to n_roots: max/mean ≤ n holds for any nonnegative
+    vector, so anything larger is float-noise from a near-zero mean and
+    would otherwise misroute trivial buckets to the persistent engine.
+    Shared by `choose_engine` and the driver's per-bucket memo so cached
+    replays and fresh runs always agree."""
+    costs = np.asarray(costs, dtype=np.float64)
+    n = int(costs.size)
+    if n == 0:
+        return 1.0
+    m = float(costs.max())
+    mean = float(costs.mean())
+    if not np.isfinite(m) or m <= 0.0 or mean <= 0.0:
+        return 1.0
+    return min(m / mean, float(n))
+
+
 def choose_engine(costs: Optional[np.ndarray] = None, *, lanes: int = 64,
                   skew: Optional[float] = None,
                   n_roots: Optional[int] = None,
@@ -339,15 +371,17 @@ def choose_engine(costs: Optional[np.ndarray] = None, *, lanes: int = 64,
     single-host `run()` and the distributed driver share it (the driver
     imports the engine, never the reverse — DESIGN.md §6). Pass
     `skew=`/`n_roots=` instead of `costs` when the skew is already
-    memoized (the driver caches it on the bucket for cached replays)."""
+    memoized (the driver caches it on the bucket for cached replays).
+    Edge buckets never crash or misroute: empty/all-pad/degenerate cost
+    vectors score skew 1.0 and the skew is clamped to n_roots either way
+    (`root_cost_skew`)."""
     if costs is not None:
         costs = np.asarray(costs, dtype=np.float64)
         n_roots = int(costs.size)
-        if n_roots == 0 or float(costs.max()) <= 0.0:
-            return "perroot", lanes
-        skew = float(costs.max()) / max(float(costs.mean()), 1e-12)
-    if skew is None or n_roots is None:
+        skew = root_cost_skew(costs)   # 1.0 on empty/all-pad/degenerate
+    if skew is None or n_roots is None or not np.isfinite(skew):
         return "perroot", lanes
+    skew = min(skew, float(max(n_roots, 1)))   # memoized-skew callers too
     if n_roots < min_roots or skew < skew_threshold:
         return "perroot", lanes
     per_lane = max(1, n_roots // 4)
@@ -386,6 +420,9 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
     (`choose_engine`); the explicit flags remain hard overrides."""
     if engine not in ("perroot", "persistent", "auto"):
         raise ValueError(f"unknown engine {engine!r}")
+    if backend not in fr.BACKENDS:
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected one of {fr.BACKENDS})")
     prep = prepare(g, global_red=global_red, x_red=x_red,
                    bucket_sizes=bucket_sizes, max_x_rows=max_x_rows,
                    split_threshold=split_threshold)

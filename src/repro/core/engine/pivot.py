@@ -5,6 +5,10 @@ Backends:
   'revised' — same but the pool is restricted to P (paper's revised BK)
   'rcd'     — top-down clique test + min-degree branching, selected per
               visit (no branch set is precomputed at call entry)
+  'hybrid'  — 'pivot' plus the per-node checks of Wang et al. (PAPERS.md):
+              early termination / X-domination pruning at call entry
+              (`hybrid_early_term`) and a density-triggered switch to
+              vertex branching (B = P) on near-clique nodes
 
 Every score sweep is a fused AND+popcount(+argmax) dispatch through
 `bitset_ops.ops`; nothing here touches `ref`/`kernel` directly.
@@ -18,7 +22,10 @@ from repro.kernels.bitset_ops import ops as bitops
 
 
 def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red, deg=None):
-    """Branch set B = P \\ N(pivot) for the 'pivot'/'revised' backends.
+    """Branch set B for the 'pivot'/'revised'/'hybrid' backends.
+
+    B = P \\ N(pivot), except that 'hybrid' overrides to vertex branching
+    (B = P) on nodes whose induced density reaches cfg.hybrid_density.
 
     `red` is the ReducedFrame from dynamic_reduce (None when dynamic
     reduction is off); with cfg.reuse_degrees its degP2/n_full replace the
@@ -38,11 +45,17 @@ def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red, deg=None):
         # §Perf: every `full` vertex was adjacent to ALL of P', so deg over
         # the final P is exactly degP2 − n_full for surviving P members —
         # reuse instead of a third AND+popcount sweep of A.
-        uni_scores = jnp.where(pool, red.degP2 - red.n_full, -1)
-        best_u = jnp.argmax(uni_scores)
-        su = uni_scores[best_u]
+        deg_vec = red.degP2 - red.n_full
     elif deg is not None and cfg.reuse_degrees:
-        uni_scores = jnp.where(pool, deg, -1)
+        deg_vec = deg
+    elif cfg.backend == "hybrid":
+        # hybrid's density test needs the whole degree vector, not just the
+        # argmax — one ref-matching sweep instead of the fused pivot-select
+        deg_vec = bitops.and_popcount_rows(ctx.A, P)
+    else:
+        deg_vec = None
+    if deg_vec is not None:
+        uni_scores = jnp.where(pool, deg_vec, -1)
         best_u = jnp.argmax(uni_scores)
         su = uni_scores[best_u]
     else:
@@ -51,7 +64,55 @@ def branch_set(cfg, ctx: fr.RootContext, P, Xp, xal, red, deg=None):
                                             fr.bitset_to_mask(xal, XC))
     use_x = sx > su
     pivot_row = jnp.where(use_x, ctx.x_rows[best_x], ctx.A[best_u])
-    return P & ~pivot_row
+    B = P & ~pivot_row
+    if cfg.backend == "hybrid":
+        # per-node branch selection (Wang et al.): on a near-clique P the
+        # pivot prunes almost nothing while its children early-terminate
+        # immediately, so branch on every vertex (B = P) instead of paying
+        # the pivot's serialization. Σ_{v∈P} deg_P(v) = 2|E[P]|, so the
+        # density trigger is sum_deg ≥ hybrid_density · |P|·(|P|−1); counts
+        # stay < 2^24 (U ≤ 1024), exact in f32.
+        psize = fr.popcount(P)
+        sum_deg = jnp.sum(jnp.where(in_p, deg_vec, 0))
+        dense = (sum_deg.astype(jnp.float32) >=
+                 cfg.hybrid_density * psize.astype(jnp.float32) *
+                 (psize - 1).astype(jnp.float32))
+        B = jnp.where(dense, P, B)
+    return B
+
+
+def hybrid_early_term(carry, cfg, ctx: fr.RootContext, P, Xp, xal, Rb, rsz,
+                      enable):
+    """'hybrid' call-entry checks (Wang et al., PAPERS.md): one fused
+    census over the stacked adjacency + X0 rows decides, per node,
+
+    * early termination — P induces a clique (every member is adjacent to
+      the |P|−1 others), so R ∪ P is the subtree's ONLY maximal candidate:
+      report it (unless dominated) and pop without recursing;
+    * X-domination pruning — some forbidden x dominates P (P ⊆ N(x)), so
+      every candidate R ∪ S with S ⊆ P below this node is extendable by x
+      (x is adjacent to all of R by the X invariant): pop silently.
+
+    Returns (carry, stop); stop=True means don't push the frame. The
+    report side-effect is gated by `enable`, so the persistent engine's
+    refill claims and live-masked lane steps inherit the same gating as
+    every other carry write — no extra plumbing per dispatch path."""
+    rows = jnp.concatenate([ctx.A, ctx.x_rows], axis=0)
+    in_p = jnp.concatenate([fr.bitset_to_mask(P, ctx.u),
+                            jnp.zeros((ctx.xc,), bool)])
+    in_x = jnp.concatenate([fr.bitset_to_mask(Xp, ctx.u),
+                            fr.bitset_to_mask(xal, ctx.xc)])
+    n_full, n_dom = bitops.clique_counts(rows, P, in_p, in_x)
+    psize = fr.popcount(P)
+    is_clique = (n_full == psize) & (psize > 0)
+    dominated = n_dom > 0
+    size = rsz + psize
+    carry = fr.report_single(carry, cfg, Rb | P, size,
+                             is_clique & ~dominated & (size >= 2) & enable)
+    # psize == 0 makes domination vacuous (pc == 0 == |P| for every alive
+    # x), but the empty-P frame is never pushed anyway — keep stop False
+    # there so the leaf report path stays the single authority.
+    return carry, is_clique | (dominated & (psize > 0))
 
 
 def rcd_select(ctx: fr.RootContext, P):

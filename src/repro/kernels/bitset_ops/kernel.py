@@ -9,6 +9,10 @@ Three fused primitives back the MCE engine's inner loop (see DESIGN.md §3):
   next to the (K, W) row load the kernel fuses away).
 * `and_popcount_many`  — one row matrix against an (M, W) batch of masks;
   the X-subset maximality test shape.
+* `frame_step`         — fused BK child-set + degree + Lemma-7 partner pass.
+* `clique_counts`      — the hybrid backend's early-termination census:
+  per-row AND+popcount against P plus the is-it-|P|/|P|−1 comparisons fused
+  in one pass; the two scalar counts reduce in jnp outside.
 
 All are tiled so each grid step keeps a (BK, W) row tile + the mask(s) in
 VMEM. On TPU the AND+popcount pipeline runs on the VPU (8×128 lanes); W is
@@ -197,6 +201,66 @@ def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
         interpret=interpret,
     )(rows, p[None, :], xp[None, :], wrow[None, :])
     return childp[0], childxp[0], deg[:k, 0], partner[:k, 0]
+
+
+def _clique_counts_kernel(rows_ref, mask_ref, inp_ref, inx_ref,
+                          full_ref, dom_ref):
+    rows = rows_ref[...]                      # (BK, W) uint32
+    mask = mask_ref[...]                      # (1, W) uint32
+    inp = inp_ref[...]                        # (BK, 1) int32 (0/1)
+    inx = inx_ref[...]                        # (BK, 1) int32 (0/1)
+    anded = jnp.bitwise_and(rows, mask)
+    pc = jnp.sum(jax.lax.population_count(anded).astype(jnp.float32),
+                 axis=1, keepdims=True)       # (BK, 1) f32 (exact < 2^24)
+    msize = jnp.sum(jax.lax.population_count(mask).astype(jnp.float32),
+                    axis=1, keepdims=True)    # (1, 1)
+    # per-row 0/1 flags; the two scalar counts reduce in jnp outside the
+    # pallas_call (batch-safety: each grid step writes only its own block)
+    full_ref[...] = ((inp != 0) & (pc == msize - 1.0)).astype(jnp.int32)
+    dom_ref[...] = ((inx != 0) & (pc == msize)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def clique_counts(rows: jnp.ndarray, mask: jnp.ndarray, in_p: jnp.ndarray,
+                  in_x: jnp.ndarray, block_k: int = DEFAULT_BLOCK_K,
+                  interpret: bool = True):
+    """Fused early-termination census (see ref.clique_counts for the
+    contract). rows: (K, W) uint32, mask: (W,) uint32, in_p/in_x: (K,) bool
+    -> (n_full, n_dom) int32 scalars.
+
+    One VMEM pass per row tile fuses the AND+popcount sweep against P with
+    the ==|P| / ==|P|−1 comparisons; the kernel emits per-row 0/1 flags and
+    the final counts are jnp sums over the (K,) flag vectors (negligible
+    traffic next to the fused-away (K, W) row load, and keeps every grid
+    step independent — vmap's batched-grid lowering stays correct)."""
+    k, w = rows.shape
+    bk = min(block_k, k)
+    k_pad = -(-k // bk) * bk
+    inp_i = in_p.astype(jnp.int32)
+    inx_i = in_x.astype(jnp.int32)
+    if k_pad != k:
+        # pad rows are all-zero AND carry 0 selectors, so they never count
+        rows = jnp.pad(rows, ((0, k_pad - k), (0, 0)))
+        inp_i = jnp.pad(inp_i, (0, k_pad - k))
+        inx_i = jnp.pad(inx_i, (0, k_pad - k))
+    grid = (k_pad // bk,)
+    full, dom = pl.pallas_call(
+        _clique_counts_kernel,
+        out_shape=(jax.ShapeDtypeStruct((k_pad, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((k_pad, 1), jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, w), lambda i: (i, 0)),      # row tile in VMEM
+            pl.BlockSpec((1, w), lambda i: (0, 0)),       # mask replicated
+            pl.BlockSpec((bk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bk, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((bk, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bk, 1), lambda i: (i, 0))),
+        interpret=interpret,
+    )(rows, mask[None, :], inp_i[:, None], inx_i[:, None])
+    return (jnp.sum(full[:k, 0]).astype(jnp.int32),
+            jnp.sum(dom[:k, 0]).astype(jnp.int32))
 
 
 def _and_popcount_many_kernel(rows_ref, masks_ref, out_ref):

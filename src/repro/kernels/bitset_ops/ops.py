@@ -75,6 +75,20 @@ def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
     return ref.and_popcount_many(rows, masks)
 
 
+def clique_counts(rows: jnp.ndarray, mask: jnp.ndarray, in_p: jnp.ndarray,
+                  in_x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused early-termination census (hybrid backend): (n_full, n_dom).
+
+    n_full = #{k : in_p[k] ∧ popcount(rows[k] & mask) == popcount(mask)−1},
+    n_dom  = #{k : in_x[k] ∧ popcount(rows[k] & mask) == popcount(mask)}.
+    With rows = adjacency ∪ X0 rows and mask = P: P induces a clique iff
+    n_full == |P|, and some forbidden vertex dominates P iff n_dom > 0 —
+    one row-vs-mask batch popcount decides emit-and-pop vs recurse."""
+    if _on_tpu() and rows.ndim == 2:
+        return kernel.clique_counts(rows, mask, in_p, in_x, interpret=False)
+    return ref.clique_counts(rows, mask, in_p, in_x)
+
+
 def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
                wrow: jnp.ndarray):
     """Fused BK frame step: (childp, childxp, deg, partner).

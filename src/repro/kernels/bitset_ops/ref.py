@@ -67,6 +67,29 @@ def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
     return childp, childxp, deg, partner
 
 
+def clique_counts(rows: jnp.ndarray, mask: jnp.ndarray, in_p: jnp.ndarray,
+                  in_x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused early-termination census for the hybrid backend.
+
+    rows: (..., K, W) uint32, mask: (..., W) uint32 (the candidate set P),
+    in_p/in_x: (..., K) bool row selectors -> (n_full, n_dom), both
+    (...,) int32:
+      n_full = |{k : in_p[k] ∧ popcount(rows[k] & mask) == popcount(mask)−1}|
+      n_dom  = |{k : in_x[k] ∧ popcount(rows[k] & mask) == popcount(mask)}|
+    With rows = adjacency ∪ X0 rows, in_p selecting P members and in_x the
+    forbidden rows, P induces a clique iff n_full == |P| (each member is
+    adjacent to the |P|−1 others; self-bits are absent from adjacency rows)
+    and some forbidden vertex dominates P (P ⊆ N(x)) iff n_dom > 0.
+    """
+    pc = and_popcount_rows(rows, mask)
+    msize = jnp.sum(jax.lax.population_count(mask),
+                    axis=-1).astype(jnp.int32)
+    full = in_p & (pc == (msize - 1)[..., None])
+    dom = in_x & (pc == msize[..., None])
+    return (jnp.sum(full.astype(jnp.int32), axis=-1),
+            jnp.sum(dom.astype(jnp.int32), axis=-1))
+
+
 def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
     """One row matrix against a batch of masks.
 

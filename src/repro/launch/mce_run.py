@@ -68,8 +68,13 @@ def parse_graph(desc: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="ba:n=2000,m=6")
-    ap.add_argument("--backend", choices=("pivot", "rcd", "revised"),
-                    default="pivot")
+    ap.add_argument("--backend",
+                    choices=("pivot", "rcd", "revised", "hybrid"),
+                    default="pivot",
+                    help="hybrid: pivot branching plus per-node early "
+                         "termination / X-domination pruning and a "
+                         "density-triggered vertex-branch switch "
+                         "(DESIGN.md §2.7)")
     ap.add_argument("--chunk", type=int, default=512)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")

@@ -68,13 +68,25 @@ class MCEService:
 
         `engine`/`lanes` override the service defaults for this query
         only (e.g. A/B the persistent queue against lock-step vmap on
-        identical packed buckets)."""
+        identical packed buckets). Only `None` means "use the service
+        default" — a falsy-but-explicit override (empty string, 0) is a
+        caller error and raises instead of silently falling back."""
+        if engine is None:
+            engine = self.engine
+        elif engine not in ("perroot", "persistent", "auto"):
+            raise ValueError(f"unknown engine override {engine!r} "
+                             "(expected 'perroot'|'persistent'|'auto')")
+        if lanes is None:
+            lanes = self.lanes
+        elif not isinstance(lanes, int) or isinstance(lanes, bool) \
+                or lanes < 1:
+            raise ValueError(f"lanes override must be a positive int, "
+                             f"got {lanes!r}")
         kwargs = {} if self.mesh is None else {"mesh": self.mesh,
                                                "axis": self.axis}
         drv = DistributedMCE(prep=self.stream, chunk=self.chunk,
                              ckpt_path=ckpt_path, cfg=cfg,
-                             engine=engine or self.engine,
-                             lanes=lanes or self.lanes, **kwargs)
+                             engine=engine, lanes=lanes, **kwargs)
         res = drv.run(resume=resume)
         self.queries += 1
         delta = {k: int(drv.last_counters.get(k, 0))

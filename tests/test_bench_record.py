@@ -1,0 +1,91 @@
+"""BENCH_*.json trajectory records: append/migrate/validate round-trip.
+
+Regression for the snapshot-overwrite bug: perf_prep/perf_engine used to
+`json.dump` one flat snapshot per run, so CI erased the history every
+time. `append_run` must keep the latest metrics at top level (consumer
+compat) while growing a "runs" history, migrate legacy snapshots in
+place, and `validate` must flag any file that regressed to a snapshot.
+"""
+import json
+
+import pytest
+
+from benchmarks.bench_record import append_run, main, validate
+
+
+def test_append_creates_and_accumulates(tmp_path):
+    p = str(tmp_path / "BENCH_x.json")
+    doc1 = append_run(p, {"speedup": 2.0, "graph": "ba"})
+    assert doc1["speedup"] == 2.0            # top-level compat field
+    assert len(doc1["runs"]) == 1
+    rec = doc1["runs"][0]
+    assert rec["speedup"] == 2.0
+    assert isinstance(rec["commit"], str) and isinstance(rec["date"], str)
+    doc2 = append_run(p, {"speedup": 3.0, "graph": "ba"})
+    assert doc2["speedup"] == 3.0            # top level tracks the LAST run
+    assert len(doc2["runs"]) == 2
+    assert doc2["runs"][0]["speedup"] == 2.0  # history preserved
+    with open(p) as f:
+        assert json.load(f) == doc2
+    assert validate(p) == []
+
+
+def test_append_migrates_legacy_snapshot(tmp_path):
+    """A pre-trajectory flat snapshot becomes the first history record."""
+    p = str(tmp_path / "BENCH_legacy.json")
+    with open(p, "w") as f:
+        json.dump({"speedup": 1.5, "roots": 100}, f)
+    doc = append_run(p, {"speedup": 1.8, "roots": 100})
+    assert len(doc["runs"]) == 2
+    assert doc["runs"][0] == {"speedup": 1.5, "roots": 100,
+                              "commit": "unknown", "date": "unknown"}
+    assert doc["speedup"] == 1.8
+    assert validate(p) == []
+
+
+def test_append_rejects_reserved_metric_names(tmp_path):
+    p = str(tmp_path / "BENCH_r.json")
+    for bad in ("runs", "commit", "date"):
+        with pytest.raises(ValueError, match="reserved"):
+            append_run(p, {bad: 1})
+
+
+def test_validate_flags_snapshot_regression(tmp_path):
+    p = str(tmp_path / "BENCH_snap.json")
+    with open(p, "w") as f:
+        json.dump({"speedup": 2.0}, f)       # no "runs": the old bug shape
+    problems = validate(p)
+    assert problems and "runs" in problems[0]
+
+
+def test_validate_flags_stale_top_level(tmp_path):
+    """Top-level metrics drifting from the last run record means some
+    writer bypassed append_run — the mirror invariant is the tripwire."""
+    p = str(tmp_path / "BENCH_stale.json")
+    append_run(p, {"speedup": 2.0})
+    with open(p) as f:
+        doc = json.load(f)
+    doc["speedup"] = 9.9                     # hand-edited / stale mirror
+    with open(p, "w") as f:
+        json.dump(doc, f)
+    assert any("differs" in m for m in validate(p))
+
+
+def test_validate_flags_malformed_records(tmp_path):
+    p = str(tmp_path / "BENCH_bad.json")
+    with open(p, "w") as f:
+        json.dump({"speedup": 1.0,
+                   "runs": [{"speedup": 1.0}]}, f)   # no commit/date
+    problems = validate(p)
+    assert any("commit" in m for m in problems)
+    assert any("date" in m for m in problems)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = str(tmp_path / "BENCH_good.json")
+    append_run(good, {"v": 1})
+    assert main(["--validate", good]) == 0
+    bad = str(tmp_path / "BENCH_bad.json")
+    with open(bad, "w") as f:
+        json.dump({"v": 1}, f)
+    assert main(["--validate", good, bad]) == 1

@@ -187,6 +187,99 @@ def test_vmap_and_popcount_many_parity(b, k, m, w):
 
 
 # --------------------------------------------------------------------------
+# clique_counts: fused is-P-a-clique / X-domination counts
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,w,block_k", [
+    (1, 1, 256), (7, 4, 4), (100, 8, 32), (515, 4, 256),  # K % block_k != 0
+    (64, 128, 64),                # W at the lane boundary
+    (33, 160, 16),                # W over the boundary
+])
+def test_clique_counts_parity(k, w, block_k):
+    rng = np.random.default_rng(k * 100 + w + 7)
+    rows = jnp.asarray(_rand((k, w), k + w + 7))
+    mask = jnp.asarray(_rand((w,), k * w + 8))
+    in_p = rng.random(k) < 0.5
+    in_x = ~in_p & (rng.random(k) < 0.5)
+    got = bk.clique_counts(rows, mask, jnp.asarray(in_p), jnp.asarray(in_x),
+                           block_k=block_k, interpret=True)
+    want = ref.clique_counts(rows, mask, jnp.asarray(in_p),
+                             jnp.asarray(in_x))
+    assert (int(got[0]), int(got[1])) == (int(want[0]), int(want[1]))
+
+
+@pytest.mark.parametrize("b,k,w,block_k", [
+    (3, 100, 8, 32),
+    (4, 33, 4, 16),               # K % block_k != 0
+    (2, 7, 128, 4),               # W at the lane boundary
+])
+def test_vmap_clique_counts_parity(b, k, w, block_k):
+    rng = np.random.default_rng(b + k + w)
+    rows = jnp.asarray(_rand((b, k, w), b * k + 9))
+    mask = jnp.asarray(_rand((b, w), b + k + 10))
+    in_p = rng.random((b, k)) < 0.5
+    in_x = ~in_p & (rng.random((b, k)) < 0.5)
+    gf, gd = jax.vmap(lambda r, m, p, x: bk.clique_counts(
+        r, m, p, x, block_k=block_k, interpret=True))(
+        rows, mask, jnp.asarray(in_p), jnp.asarray(in_x))
+    wf, wd = ref.clique_counts(rows, mask, jnp.asarray(in_p),
+                               jnp.asarray(in_x))
+    np.testing.assert_array_equal(np.asarray(gf), np.asarray(wf))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+def test_vmap_clique_counts_every_batch_element_initialised():
+    """Distinct stacked examples must each get their own counts (a kernel
+    whose pad-handling or output blocks depended on program_id(0) would
+    bleed counts across batch elements under vmap)."""
+    b = 4
+    rng = np.random.default_rng(51)
+    rows = jnp.asarray(_rand((b, 40, 4), 52))
+    mask = jnp.asarray(_rand((b, 4), 53))
+    in_p = rng.random((b, 40)) < 0.5
+    in_x = ~in_p & (rng.random((b, 40)) < 0.5)
+    gf, gd = jax.vmap(lambda r, m, p, x: bk.clique_counts(
+        r, m, p, x, block_k=8, interpret=True))(
+        rows, mask, jnp.asarray(in_p), jnp.asarray(in_x))
+    for bi in range(b):
+        wf, wd = ref.clique_counts(rows[bi], mask[bi],
+                                   jnp.asarray(in_p[bi]),
+                                   jnp.asarray(in_x[bi]))
+        assert int(gf[bi]) == int(wf)
+        assert int(gd[bi]) == int(wd)
+
+
+def test_dispatch_clique_counts(monkeypatch):
+    """2-D on TPU routes to the kernel; batch dims fall back to ref."""
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    calls = []
+
+    def fake(rows, mask, in_p, in_x, interpret):
+        calls.append(("clique", interpret))
+        return ref.clique_counts(rows, mask, in_p, in_x)
+
+    monkeypatch.setattr(ops.kernel, "clique_counts", fake)
+    rows = jnp.asarray(_rand((6, 2), 61))
+    mask = jnp.asarray(_rand((2,), 62))
+    in_p = jnp.asarray(np.array([1, 0, 1, 0, 1, 0], bool))
+    ops.clique_counts(rows, mask, in_p, ~in_p)
+    assert calls == [("clique", False)]
+    calls.clear()
+
+    def boom(*a, **k):
+        raise RuntimeError("pallas kernel must not be called for 3-D")
+
+    monkeypatch.setattr(ops.kernel, "clique_counts", boom)
+    rows3 = jnp.asarray(_rand((2, 6, 2), 63))
+    mask2 = jnp.asarray(_rand((2, 2), 64))
+    in_p3 = jnp.asarray(np.random.default_rng(65).random((2, 6)) < 0.5)
+    gf, gd = ops.clique_counts(rows3, mask2, in_p3, ~in_p3)
+    wf, wd = ref.clique_counts(rows3, mask2, in_p3, ~in_p3)
+    np.testing.assert_array_equal(np.asarray(gf), np.asarray(wf))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+# --------------------------------------------------------------------------
 # frame_step: fused child-set + degree + Lemma-7 partner step
 # --------------------------------------------------------------------------
 

@@ -43,6 +43,55 @@ def test_and_popcount_blocks(block_k):
 
 
 # --------------------------------------------------------------------------
+# bitset_ops: fused is-P-a-clique / X-domination counts
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 7, 100, 515])
+@pytest.mark.parametrize("w", [1, 4, 8])
+def test_clique_counts(k, w):
+    rng = np.random.default_rng(k * 37 + w)
+    rows = rng.integers(0, 2**32, (k, w), dtype=np.uint32)
+    mask = rng.integers(0, 2**32, (w,), dtype=np.uint32)
+    in_p = rng.random(k) < 0.5
+    in_x = ~in_p & (rng.random(k) < 0.5)
+    got = bk.clique_counts(jnp.asarray(rows), jnp.asarray(mask),
+                           jnp.asarray(in_p), jnp.asarray(in_x),
+                           interpret=True)
+    want = br.clique_counts(jnp.asarray(rows), jnp.asarray(mask),
+                            jnp.asarray(in_p), jnp.asarray(in_x))
+    assert (int(got[0]), int(got[1])) == (int(want[0]), int(want[1]))
+    # independent python-int cross-check of the ref itself
+    m_int = int.from_bytes(mask.tobytes(), "little")
+    msize = bin(m_int).count("1")
+    full = dom = 0
+    for ki in range(k):
+        pc = bin(int.from_bytes(rows[ki].tobytes(), "little") & m_int
+                 ).count("1")
+        full += int(in_p[ki] and pc == msize - 1)
+        dom += int(in_x[ki] and pc == msize)
+    assert (int(want[0]), int(want[1])) == (full, dom)
+
+
+def test_clique_counts_detects_clique():
+    """A packed triangle: every P member adjacent to the other two."""
+    # vertices 0,1,2 mutually adjacent -> rows[i] = P & ~bit(i)
+    p = np.array([0b111], np.uint32)
+    rows = np.array([[0b110], [0b101], [0b011],   # the triangle
+                     [0b001]], np.uint32)         # an X row seeing only v0
+    in_p = np.array([True, True, True, False])
+    in_x = np.array([False, False, False, True])
+    n_full, n_dom = br.clique_counts(jnp.asarray(rows), jnp.asarray(p),
+                                     jnp.asarray(in_p), jnp.asarray(in_x))
+    assert int(n_full) == 3          # == |P|: P is a clique
+    assert int(n_dom) == 0           # the X row misses v1,v2: no domination
+    # an X vertex adjacent to ALL of P dominates -> n_dom > 0
+    rows[3] = 0b111
+    _, n_dom = br.clique_counts(jnp.asarray(rows), jnp.asarray(p),
+                                jnp.asarray(in_p), jnp.asarray(in_x))
+    assert int(n_dom) == 1
+
+
+# --------------------------------------------------------------------------
 # common_neighbor: tiled existence check
 # --------------------------------------------------------------------------
 

@@ -70,6 +70,14 @@ def test_lower_and_popcount_many_vmem_clamp(k, m, w):
                _rand((k, w), 14), _rand((m, w), 15))
 
 
+def test_lower_clique_counts():
+    flags = np.random.default_rng(24).random(K) < 0.5
+    _lower_tpu(
+        lambda r, m, p, x: bk.clique_counts(r, m, p, x, interpret=False),
+        _rand((K, W), 25), _rand((W,), 26),
+        jnp.asarray(flags), jnp.asarray(~flags))
+
+
 def test_lower_frame_step():
     _lower_tpu(lambda r, p, x, wr: bk.frame_step(r, p, x, wr,
                                                  interpret=False),
@@ -101,6 +109,15 @@ def test_lower_vmapped_and_popcount_many():
     _lower_tpu(
         jax.vmap(lambda r, ms: bk.and_popcount_many(r, ms, interpret=False)),
         _rand((B, K, W), 12), _rand((B, M, W), 13))
+
+
+def test_lower_vmapped_clique_counts():
+    flags = np.random.default_rng(27).random((B, K)) < 0.5
+    _lower_tpu(
+        jax.vmap(lambda r, m, p, x: bk.clique_counts(r, m, p, x,
+                                                     interpret=False)),
+        _rand((B, K, W), 28), _rand((B, W), 29),
+        jnp.asarray(flags), jnp.asarray(~flags))
 
 
 def test_lower_vmapped_frame_step():
