@@ -27,7 +27,15 @@ R3 (Mosaic compilability): flag
   back (the PR-1 review fix);
 * `pl.BlockSpec` shapes built from literals whose trailing dims are
   neither (8, 128)-multiples nor 1 (1 ~ "equals the array dim", which
-  is legal; non-literal dims are shape-dependent and skipped).
+  is legal; non-literal dims are shape-dependent and skipped);
+* `pltpu.VMEM` scratch entries in `scratch_shapes` whose trailing dims
+  are not (8, 128)-aligned *literals*. Scratch has no backing array to
+  borrow dims from, so the BlockSpec "equals the array dim" escape does
+  not exist: Mosaic allocates the scratch tile at compile time and a
+  traced/derived dim either fails to lower or pads to a tile silently.
+  The dfs_step_window kernel's resident stack window is the contract's
+  poster child (literal (8, 128) frames); SMEM scratch is scalar memory
+  and exempt.
 
 Both rules are static approximations: dtypes are inferred by a local
 forward dataflow over the kernel body (population_count/bitwise -> int,
@@ -418,6 +426,52 @@ def check_blockspecs(mod: Module) -> List[Finding]:
     return findings
 
 
+def check_scratch_shapes(mod: Module) -> List[Finding]:
+    """VMEM scratch_shapes entries: trailing dims must be (8, 128)-aligned
+    literals (no array to inherit dims from — see module docstring)."""
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and
+                name_endswith(node, "pallas_call")):
+            continue
+        scr = _kw(node, "scratch_shapes")
+        if scr is None or not isinstance(scr, (ast.Tuple, ast.List)):
+            continue
+        for entry in scr.elts:
+            if not (isinstance(entry, ast.Call) and
+                    name_endswith(entry, "VMEM")):
+                continue              # SMEM is scalar memory: no tiling
+            shape = entry.args[0] if entry.args else None
+            if not isinstance(shape, (ast.Tuple, ast.List)) or not shape.elts:
+                findings.append(Finding(
+                    rule=RULE_MOSAIC, path=mod.path, line=entry.lineno,
+                    col=entry.col_offset,
+                    message=("VMEM scratch shape is not a literal tuple — "
+                             "Mosaic sizes scratch at compile time; spell "
+                             "the dims as (8, 128)-aligned int literals "
+                             "(DESIGN.md §3)")))
+                continue
+            dims = shape.elts[-2:]
+            mults = (128,) if len(shape.elts) == 1 else (8, 128)
+            bad = []
+            for d, mult in zip(dims, mults):
+                if not (isinstance(d, ast.Constant) and
+                        isinstance(d.value, int)):
+                    bad.append(f"dim {ast.unparse(d)} is not an int literal")
+                elif d.value % mult != 0:
+                    bad.append(f"dim {d.value} is not a multiple of {mult}")
+            if bad:
+                findings.append(Finding(
+                    rule=RULE_MOSAIC, path=mod.path, line=entry.lineno,
+                    col=entry.col_offset,
+                    message=(f"VMEM scratch trailing dims must be (8, 128)-"
+                             f"aligned literals: {'; '.join(bad)} — scratch "
+                             f"has no backing array dim to equal, so the "
+                             f"BlockSpec escape hatch does not apply "
+                             f"(DESIGN.md §3)")))
+    return findings
+
+
 def check(index: PackageIndex) -> List[Finding]:
     findings: List[Finding] = []
     for mod in index:
@@ -429,4 +483,5 @@ def check(index: PackageIndex) -> List[Finding]:
             findings.extend(check_kernel_vmap_safety(mod, fn, kinds))
             findings.extend(check_kernel_mosaic(mod, fn))
         findings.extend(check_blockspecs(mod))
+        findings.extend(check_scratch_shapes(mod))
     return findings

@@ -54,9 +54,12 @@ from repro.sharding.compat import shard_map
 # equivalent is Σ per-root iters over max(iters)·lanes — the lock-step vmap
 # runs every lane until the slowest root finishes, which is exactly the
 # idle time the persistent queue reclaims (surfaced per query through
-# MCEService.stats).
+# MCEService.stats). "steals"/"entry_terms" only move on the persistent
+# engine (adopted branch-set halves and claims that finished inside their
+# entry call); the perroot path zero-fills them so the counter schema —
+# and every checkpoint written against it — is engine-independent.
 COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px", "truncated",
-                "live_iters", "lane_iters")
+                "live_iters", "lane_iters", "steals", "entry_terms")
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +140,8 @@ def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
             # lock-step equivalent of the queue's occupancy pair: every
             # vmap lane spins until the slowest root's DFS exhausts
             out = dict(out, live_iters=jnp.sum(out["iters"]),
-                       lane_iters=jnp.max(out["iters"]) * a_s.shape[1])
+                       lane_iters=jnp.max(out["iters"]) * a_s.shape[1],
+                       steals=jnp.int32(0), entry_terms=jnp.int32(0))
         sums = {k: jnp.sum(out[k]).astype(jnp.int32)[None]
                 for k in COUNTER_KEYS}
         return sums

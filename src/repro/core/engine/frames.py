@@ -113,6 +113,18 @@ class EngineConfig:
     # threshold — near-clique nodes early-terminate in their children, so
     # the pivot sweep's pruning buys nothing there (DESIGN.md §2.7).
     hybrid_density: float = 0.9
+    # Persistent-engine lane work stealing (DESIGN.md §2.6 STEAL): when the
+    # root queue is drained and a lane idles, it adopts half of the deepest
+    # live lane's bottom-of-stack branch set. Pure scheduling — counters and
+    # enumerated sets are bit-identical either way (pivot-family backends
+    # only; 'rcd' carries no branch set and never steals).
+    steal: bool = True
+    # VMEM stack windowing: >0 routes eligible per-root walks (pivot
+    # backend, dynamic_red off, counting only) through the fused
+    # `dfs_step_window` dispatch — K frame-steps per invocation with the
+    # top WINDOW_FRAMES stack frames resident, spilling to the HBM stack
+    # only on window overflow/underflow (DESIGN.md §2.6/§3). 0 = off.
+    window_steps: int = 0
 
 
 # ===========================================================================

@@ -154,10 +154,93 @@ def dfs_step(cfg, ctx: fr.RootContext, depth, stack, carry, live=None):
     return new_depth, stack, carry
 
 
+def _window_eligible(cfg: EngineConfig) -> bool:
+    """Static gate for the VMEM stack-window walk: the fused
+    `dfs_step_window` contract covers the pivot backend with dynamic
+    reduction off and counting only (no enumeration buffers ride in the
+    window)."""
+    return (cfg.window_steps > 0 and cfg.backend == "pivot"
+            and not cfg.dynamic_red and not cfg.out_cap)
+
+
+def run_root_windowed(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
+    """`run_root` with the DFS stack walked through a T-frame VMEM window.
+
+    The plain walk round-trips the whole frame through HBM on every
+    `dfs_step`. Here the outer while loop advances `cfg.window_steps`
+    frame-steps per trip via the fused `dfs_step_window` dispatch: the
+    top-T stack frames stay resident across those steps, and the HBM
+    stack is touched only at the window boundary — one T-row slice down,
+    one T-row write-back up per trip. The per-frame X0 alive set is not
+    stacked at all: it is a closed form of the frame's Rb (see
+    ref.dfs_step_window), so the window carries (P, B, Xp, Rb, rsz).
+    The window is re-centered each trip (`base = clip(d − T/2, 0, D−T)`),
+    so the walk always enters with both push and pop headroom; the kernel
+    stops early on window overflow/underflow and this wrapper re-slices.
+    Counters are bit-identical to `run_root` (same straight-line masked
+    step semantics, steps merely batched per HBM round-trip)."""
+    U, words = a.shape
+    T = bitops.WINDOW_FRAMES
+    ctx = fr.make_context(a, x_rows)
+    xal_bits0 = fr.mask_to_bitset(x_alive0, ctx.eye_x)
+    carry0 = fr.carry_init(cfg, words)
+    carry0, push0, frame0 = enter_call(
+        carry0, cfg, ctx, p0, jnp.zeros(words, U32), xal_bits0,
+        rsz0.astype(jnp.int32), jnp.zeros(words, U32))
+    alive0 = x_alive0.astype(jnp.int32)
+    # depth never exceeds U = D − 2 (every push consumes a P vertex), so a
+    # freshly centered window always has a free slot above the top frame
+    D = max(U + 2, T)
+    sP = jnp.zeros((D, words), U32).at[0].set(frame0.P)
+    sB = jnp.zeros((D, words), U32).at[0].set(frame0.B)
+    sXp = jnp.zeros((D, words), U32).at[0].set(frame0.Xp)
+    sRb = jnp.zeros((D, words), U32)
+    srsz = jnp.zeros((D,), jnp.int32).at[0].set(frame0.rsz)
+    d0 = jnp.where(push0, jnp.int32(0), jnp.int32(-1))
+
+    def cond(s):
+        return (s[0] >= 0) & (s[1] < cfg.max_iters)
+
+    def body(s):
+        d, it, sP, sB, sXp, sRb, srsz, carry = s
+        base = jnp.clip(d - T // 2, 0, D - T)
+
+        def sl(arr):
+            return jax.lax.dynamic_slice_in_dim(arr, base, T, axis=0)
+
+        wP, wB, wXp, wRb, wrsz, ctl = bitops.dfs_step_window(
+            a, x_rows, ctx.eye, alive0, sl(sP), sl(sB), sl(sXp), sl(sRb),
+            sl(srsz), d - base, steps=cfg.window_steps)
+
+        def up(arr, w):
+            return jax.lax.dynamic_update_slice_in_dim(arr, w, base, axis=0)
+
+        sP, sB, sXp = up(sP, wP), up(sB, wB), up(sXp, wXp)
+        sRb, srsz = up(sRb, wRb), up(srsz, wrsz)
+        carry = dict(carry,
+                     calls=carry["calls"] + ctl[1],
+                     branches=carry["branches"] + ctl[2],
+                     sum_px=carry["sum_px"] + ctl[3],
+                     cliques=carry["cliques"] + ctl[4])
+        return base + ctl[0], it + ctl[5], sP, sB, sXp, sRb, srsz, carry
+
+    state = (d0, jnp.int32(0), sP, sB, sXp, sRb, srsz, carry0)
+    out = jax.lax.while_loop(cond, body, state)
+    d, it, carry = out[0], out[1], out[7]
+    return dict(carry, iters=it, truncated=(d >= 0).astype(jnp.int32))
+
+
 def run_root(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
     """Run the full BK subtree of one root. Returns the final carry dict
     plus `iters` (loop iterations used) and `truncated` (1 iff the walk
-    hit cfg.max_iters with frames still live — the counts are partial)."""
+    hit cfg.max_iters with frames still live — the counts are partial).
+
+    With `cfg.window_steps > 0` and an eligible config (pivot backend,
+    dynamic reduction off, counting only) the walk routes through the
+    VMEM stack window (`run_root_windowed`) — same counters, K steps per
+    HBM stack round-trip."""
+    if _window_eligible(cfg):
+        return run_root_windowed(a, p0, x_rows, x_alive0, rsz0, cfg)
     U, words = a.shape
     ctx = fr.make_context(a, x_rows)
     D = U + 2
@@ -194,65 +277,62 @@ def run_bucket(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig):
 
 
 # ===========================================================================
-# Persistent bucket engine: lane-refill work queue (DESIGN.md §2.6)
+# Persistent bucket engine: lane-refill work queue + lane work stealing
+# (DESIGN.md §2.6)
 # ===========================================================================
 
-@partial(jax.jit, static_argnames=("cfg", "lanes"))
-def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
-                          lanes: int = 64):
-    """One jitted while_loop over a (LANES, …) batch of DFS states fed by a
-    device-resident root work queue.
+def _persistent_state0(cfg: EngineConfig, lanes: int, U: int, words: int,
+                       XC: int):
+    """Fresh lane state for one same-shape span of the root stream."""
+    D = U + 2
+    xc_words = max(-(-XC // WORD), 1)
+    track = bool(cfg.out_cap)
+    carry0 = jax.tree.map(
+        lambda x: jnp.zeros((lanes,) + x.shape, x.dtype),
+        fr.carry_init(cfg, words, track_root=track))
+    stack0 = jax.tree.map(
+        lambda x: jnp.zeros((lanes,) + x.shape, x.dtype),
+        FrameStack.alloc(D, words, xc_words))
+    return (jnp.int32(0),                        # it: loop trips
+            jnp.int32(0),                        # cp: queue claim counter
+            jnp.int32(0),                        # ls: Σ live lanes
+            jnp.int32(0),                        # st: steal count
+            jnp.int32(0),                        # et: entry-terminated roots
+            jnp.full((lanes,), jnp.int32(-1)),   # per-lane DFS depth
+            jnp.zeros((lanes, U, words), U32),   # per-lane adjacency context
+            jnp.zeros((lanes, XC, words), U32),  # per-lane X0 rows
+            stack0, carry0)
 
-    The per-root `run_bucket` vmaps lock-step: every lane spins (masked)
-    until the slowest root in the bucket finishes. Here a lane whose
-    subtree exhausts (`depth < 0`) claims the next unstarted root inside
-    the loop body — shared claim counter + per-lane exclusive-cumsum
-    offsets, no host round-trip — and reinitializes its stack in place, so
-    lanes stay saturated until the queue drains. Roots are consumed in the
-    caller's array order (the driver passes its cost-descending canonical
-    order, so the queue order IS the checkpoint cursor order).
 
-    The refill phase is wrapped in a real `lax.cond`: unlike the vmapped
-    per-root body (where cond lowers to SELECT), this loop is not under
-    vmap, so iterations with no exhausted lane skip the (LANES, U, W)
-    root-context gathers entirely.
+@partial(jax.jit, static_argnames=("cfg", "lanes", "drain"))
+def _persistent_segment(a, p0, x_rows, x_alive0, rsz0, root_base, state,
+                        cfg: EngineConfig, lanes: int, drain: bool):
+    """One jitted while_loop draining one root slab into a lane state.
 
-    Returns the per-lane carry dict plus scalars: `iters` (loop trips),
-    `live_iters` (Σ useful lane-trips: live lanes per trip, plus claims
-    whose root completed inside its entry call — those do their whole
-    subtree's work in the refill; occupancy = live_iters /
-    (iters·lanes)), `claimed`, and `truncated` (1 iff cfg.max_iters hit
-    with work remaining)."""
+    `drain=True` runs until every lane's subtree exhausts (the classic
+    per-bucket persistent loop). `drain=False` returns as soon as the
+    queue is claimed out (`cp >= R`) with lanes still live — the stream
+    caller (`run_stream_persistent`) then re-enters with the NEXT slab and
+    the same lane state, so live lanes never drain at a bucket boundary.
+    `root_base` offsets `cur_root` so enumerated cliques decode against
+    the stream-global root index."""
     R, U, words = a.shape
     XC = x_rows.shape[1]
     L = lanes
-    D = U + 2
     eye = fr.eye_bits(U, words)
     xc_words = max(-(-XC // WORD), 1)
     eye_x = fr.eye_bits(XC, xc_words)
-
-    track = bool(cfg.out_cap)
-    carry0 = jax.tree.map(
-        lambda x: jnp.zeros((L,) + x.shape, x.dtype),
-        fr.carry_init(cfg, words, track_root=track))
-    stack0 = jax.tree.map(
-        lambda x: jnp.zeros((L,) + x.shape, x.dtype),
-        FrameStack.alloc(D, words, xc_words))
-    state0 = (jnp.int32(0),                    # it: loop trips
-              jnp.int32(0),                    # cp: queue claim counter
-              jnp.int32(0),                    # ls: Σ live lanes (occupancy)
-              jnp.full((L,), jnp.int32(-1)),   # per-lane DFS depth
-              jnp.zeros((L, U, words), U32),   # per-lane adjacency context
-              jnp.zeros((L, XC, words), U32),  # per-lane X0 rows
-              stack0, carry0)
+    # 'rcd' carries no branch set at rest — nothing to split, never steals
+    can_steal = bool(cfg.steal) and cfg.backend in fr.PIVOT_BACKENDS
 
     def cond(s):
-        it, cp, _ls, depth = s[0], s[1], s[2], s[3]
-        return ((cp < R) | jnp.any(depth >= 0)) & (it < cfg.max_iters)
+        it, cp, depth = s[0], s[1], s[5]
+        more = ((cp < R) | jnp.any(depth >= 0)) if drain else (cp < R)
+        return more & (it < cfg.max_iters)
 
     def refill(args):
         """Claim protocol: exhausted lanes take consecutive queue slots."""
-        cp, ls, depth, al, xrl, stack, carry = args
+        cp, ls, et, depth, al, xrl, stack, carry = args
         exh = depth < 0
         exh_i = exh.astype(jnp.int32)
         offs = jnp.cumsum(exh_i) - exh_i       # exclusive cumsum per lane
@@ -270,8 +350,12 @@ def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
             ctx = fr.RootContext(A=a_l, x_rows=xr_l, eye=eye, eye_x=eye_x)
             if "cur_root" in carry_l:
                 carry_l = dict(carry_l, cur_root=jnp.where(
-                    claim_l, idx_l, carry_l["cur_root"]))
+                    claim_l, root_base + idx_l, carry_l["cur_root"]))
             xal0 = fr.mask_to_bitset(xa_l, eye_x)
+            # hybrid's early-termination/X-domination census runs INSIDE
+            # enter_call, i.e. inside this refill cond: a claimed root
+            # whose P is already an undominated clique reports here and
+            # `push` stays False — it never occupies a lane trip.
             carry_l, push, f0 = enter_call(
                 carry_l, cfg, ctx, p_l, jnp.zeros(words, U32), xal0,
                 rz_l.astype(jnp.int32), jnp.zeros(words, U32),
@@ -294,15 +378,86 @@ def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
         cp = cp + jnp.sum(claim.astype(jnp.int32))
         # a claimed root that finished inside its entry call (no push) did
         # its whole subtree's work this trip — count it as a useful trip
-        ls = ls + jnp.sum((claim & (depth < 0)).astype(jnp.int32))
-        return cp, ls, depth, al, xrl, stack, carry
+        done_entry = jnp.sum((claim & (depth < 0)).astype(jnp.int32))
+        ls = ls + done_entry
+        et = et + done_entry
+        return cp, ls, et, depth, al, xrl, stack, carry
+
+    def steal(args):
+        """STEAL transition (DESIGN.md §2.6): an idle lane adopts half of
+        the deepest live lane's shallowest splittable branch set (slot 0 —
+        the true bottom of stack — while it still has branches left).
+
+        The victim keeps the LOW half of B (the bits its own walk would
+        process first); the thief's slot-0 frame is exactly the state the
+        victim's frame would reach after branching on every kept bit:
+        P \\ keep, Xp ∪ keep, B = donated half. Each branch vertex still
+        receives exactly one enter_call with an identical (P, Xp, xal)
+        state, so calls/branches/sum_px/cliques and the enumerated set are
+        bit-identical to the steal-free walk — stealing is pure
+        scheduling. The thief also adopts the victim's root context and
+        `cur_root`, so enumeration decode follows the work."""
+        st, depth, al, xrl, stack, carry = args
+        idle = depth < 0
+        # donation point: the victim's SHALLOWEST live frame whose branch
+        # set still has >= 2 branches — slot 0 (the true bottom of stack)
+        # when it has work left, else the next-shallowest. Shallow frames
+        # root the largest remaining subtrees, so halving there moves the
+        # most work per steal.
+        bcnt = fr.popcount(stack.B)                    # (L, D)
+        slot_ix = jnp.arange(bcnt.shape[1], dtype=jnp.int32)[None, :]
+        live_slot = (slot_ix <= depth[:, None]) & (bcnt >= 2)
+        splittable = (depth >= 0) & jnp.any(live_slot, axis=1)
+        do = jnp.any(idle) & jnp.any(splittable)
+        victim = jnp.argmax(jnp.where(splittable, depth, jnp.int32(-1)))
+        slot = jnp.argmax(live_slot[victim]).astype(jnp.int32)
+        thief = jnp.argmax(idle).astype(victim.dtype)
+        P0, B0 = stack.P[victim, slot], stack.B[victim, slot]
+        Xp0, Rb0 = stack.Xp[victim, slot], stack.Rb[victim, slot]
+        rs0, xa0 = stack.rsz[victim, slot], stack.xal[victim, slot]
+        # split B at bit rank ceil(|B|/2): keep = lowest-ranked half
+        in_b = fr.bitset_to_mask(B0, U)
+        ib = in_b.astype(jnp.int32)
+        rank = jnp.cumsum(ib) - ib
+        keep = fr.mask_to_bitset(
+            in_b & (rank < (bcnt[victim, slot] + 1) // 2), eye)
+        donate = B0 & ~keep
+
+        def put(arr, lane, d, val):
+            return arr.at[lane, d].set(jnp.where(do, val, arr[lane, d]))
+
+        stack = stack._replace(B=put(stack.B, victim, slot, keep))
+        stack = stack._replace(
+            P=put(stack.P, thief, 0, P0 & ~keep),
+            B=put(stack.B, thief, 0, donate),
+            Xp=put(stack.Xp, thief, 0, Xp0 | keep),
+            Rb=put(stack.Rb, thief, 0, Rb0),
+            rsz=put(stack.rsz, thief, 0, rs0),
+            xal=put(stack.xal, thief, 0, xa0))
+        depth = depth.at[thief].set(
+            jnp.where(do, jnp.int32(0), depth[thief]))
+        al = al.at[thief].set(jnp.where(do, al[victim], al[thief]))
+        xrl = xrl.at[thief].set(jnp.where(do, xrl[victim], xrl[thief]))
+        if "cur_root" in carry:
+            cr = carry["cur_root"]
+            carry = dict(carry, cur_root=cr.at[thief].set(
+                jnp.where(do, cr[victim], cr[thief])))
+        st = st + do.astype(jnp.int32)
+        return st, depth, al, xrl, stack, carry
 
     def body(s):
-        it, cp, ls, depth, al, xrl, stack, carry = s
+        it, cp, ls, st, et, depth, al, xrl, stack, carry = s
         need = (cp < R) & jnp.any(depth < 0)
-        cp, ls, depth, al, xrl, stack, carry = jax.lax.cond(
+        cp, ls, et, depth, al, xrl, stack, carry = jax.lax.cond(
             need, refill, lambda args: args,
-            (cp, ls, depth, al, xrl, stack, carry))
+            (cp, ls, et, depth, al, xrl, stack, carry))
+        if can_steal:
+            # only once the queue can no longer feed the idle lane — while
+            # roots remain, claiming is strictly cheaper than splitting
+            may = jnp.any(depth < 0) & jnp.any(depth >= 0) & (cp >= R)
+            st, depth, al, xrl, stack, carry = jax.lax.cond(
+                may, steal, lambda args: args,
+                (st, depth, al, xrl, stack, carry))
         ls = ls + jnp.sum((depth >= 0).astype(jnp.int32))
 
         def lane_step(a_l, xr_l, depth_l, stack_l, carry_l):
@@ -312,16 +467,132 @@ def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
 
         depth, stack, carry = jax.vmap(lane_step)(al, xrl, depth, stack,
                                                   carry)
-        return it + 1, cp, ls, depth, al, xrl, stack, carry
+        return it + 1, cp, ls, st, et, depth, al, xrl, stack, carry
 
-    it, cp, ls, depth, _al, _xrl, _stack, carry = jax.lax.while_loop(
-        cond, body, state0)
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _persistent_out(state, R: int):
+    """Realize a lane state into the public output dict."""
+    it, cp, ls, st, et, depth, _al, _xrl, _stack, carry = state
     out = dict(carry)
     out["iters"] = it
     out["live_iters"] = ls
     out["claimed"] = cp
+    out["steals"] = st
+    out["entry_terms"] = et
     out["truncated"] = ((cp < R) | jnp.any(depth >= 0)).astype(jnp.int32)
     return out
+
+
+@partial(jax.jit, static_argnames=("cfg", "lanes"))
+def run_bucket_persistent(a, p0, x_rows, x_alive0, rsz0, cfg: EngineConfig,
+                          lanes: int = 64):
+    """One jitted while_loop over a (LANES, …) batch of DFS states fed by a
+    device-resident root work queue.
+
+    The per-root `run_bucket` vmaps lock-step: every lane spins (masked)
+    until the slowest root in the bucket finishes. Here a lane whose
+    subtree exhausts (`depth < 0`) claims the next unstarted root inside
+    the loop body — shared claim counter + per-lane exclusive-cumsum
+    offsets, no host round-trip — and reinitializes its stack in place, so
+    lanes stay saturated until the queue drains. Roots are consumed in the
+    caller's array order (the driver passes its cost-descending canonical
+    order, so the queue order IS the checkpoint cursor order).
+
+    The refill phase is wrapped in a real `lax.cond`: unlike the vmapped
+    per-root body (where cond lowers to SELECT), this loop is not under
+    vmap, so iterations with no exhausted lane skip the (LANES, U, W)
+    root-context gathers entirely. Once the queue is claimed out, a second
+    cond runs the STEAL transition (cfg.steal, pivot-family backends): an
+    idle lane splits off half of the deepest live lane's shallowest
+    splittable branch set (slot 0 while it has work, else the frame just
+    above it), so a hub root's subtree spreads across lanes instead of
+    serializing on one (counters and enumerated sets are unchanged —
+    stealing is pure scheduling).
+
+    Returns the per-lane carry dict plus scalars: `iters` (loop trips),
+    `live_iters` (Σ useful lane-trips: live lanes per trip, plus claims
+    whose root completed inside its entry call — those do their whole
+    subtree's work in the refill; occupancy = live_iters /
+    (iters·lanes)), `claimed`, `steals` (adopted branch-set halves),
+    `entry_terms` (claims that completed inside their entry call — for
+    the hybrid backend this includes every root early-terminated by the
+    refill-phase census), and `truncated` (1 iff cfg.max_iters hit with
+    work remaining)."""
+    R, U, words = a.shape
+    XC = x_rows.shape[1]
+    state0 = _persistent_state0(cfg, lanes, U, words, XC)
+    state = _persistent_segment(a, p0, x_rows, x_alive0, rsz0,
+                                jnp.int32(0), state0, cfg=cfg, lanes=lanes,
+                                drain=True)
+    return _persistent_out(state, R)
+
+
+def run_stream_persistent(slabs, cfg: EngineConfig, lanes: int = 64):
+    """Bucket-spanning persistent engine over a stream of root slabs.
+
+    `slabs` is an iterable of `(a, p0, x_rows, x_alive0, rsz0)` tuples in
+    the caller's (canonical cost-descending) root order. Consecutive slabs
+    sharing a shape signature `(U, words, XC)` form a SPAN: the lane state
+    (stacks, contexts, counters) carries across their boundary, so lanes
+    that are mid-subtree when slab k's queue is claimed out keep running
+    while slab k+1's queue feeds the refills — the loop spans the whole
+    span instead of draining and re-launching per bucket. Each non-final
+    slab runs a `drain=False` segment (returns as soon as its queue is
+    claimed out); the span's last slab re-enters with `drain=True`. A
+    shape change flushes the span (different frame/stack shapes cannot
+    share a compiled loop — those boundaries still re-launch).
+
+    Segments dispatch asynchronously: the host can stage slab k+1 (pack +
+    device_put) while the device drains slab k — the driver's §6.4
+    double-buffered overlap contract, applied to the root queue itself.
+
+    `cur_root` is offset by the stream-global root base (slab-order prefix
+    sums over slab lengths), so `out_root` decodes against the whole
+    stream. Returns `(outs, spans)`: `outs[i]` is the i-th span's output
+    dict (same schema as `run_bucket_persistent`) and `spans[i] = (lo,
+    hi)` its slab index range."""
+    outs, spans = [], []
+    state = None
+    sig = None
+    prev = None          # last slab fed to the open span (drain target)
+    lanes_g = lanes
+    root_base = 0
+    lo = 0
+    n = 0
+    for k, slab in enumerate(slabs):
+        n = k + 1
+        a = slab[0]
+        s = (a.shape[1], a.shape[2], slab[2].shape[1])
+        if state is not None and s != sig:
+            # shape change: drain the open span and flush its output
+            state = _persistent_segment(
+                *prev, jnp.int32(root_base - prev[0].shape[0]), state,
+                cfg=cfg, lanes=lanes_g, drain=True)
+            outs.append(_persistent_out(state, prev[0].shape[0]))
+            spans.append((lo, k))
+            state, prev = None, None
+        if state is None:
+            sig = s
+            lo = k
+            lanes_g = max(1, min(lanes, a.shape[0]))
+            state = _persistent_state0(cfg, lanes_g, *s)
+        else:
+            # re-arm the claim counter for the new slab; everything else
+            # (lane depths, stacks, contexts, counters) carries over
+            state = (state[0], jnp.int32(0)) + state[2:]
+        state = _persistent_segment(*slab, jnp.int32(root_base), state,
+                                    cfg=cfg, lanes=lanes_g, drain=False)
+        prev = slab
+        root_base += a.shape[0]
+    if state is not None:
+        state = _persistent_segment(
+            *prev, jnp.int32(root_base - prev[0].shape[0]), state,
+            cfg=cfg, lanes=lanes_g, drain=True)
+        outs.append(_persistent_out(state, prev[0].shape[0]))
+        spans.append((lo, n))
+    return outs, spans
 
 
 # ===========================================================================
@@ -410,7 +681,8 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
         bucket_sizes: Sequence[int] = (32, 64, 128, 256, 512, 1024),
         max_x_rows: int = 8192,
         split_threshold: Optional[int] = None,
-        engine: str = "perroot", lanes: int = 64) -> MCEResult:
+        engine: str = "perroot", lanes: int = 64,
+        steal: bool = True, window_steps: int = 0) -> MCEResult:
     """End-to-end single-host MCE: prepare on host, run buckets on device.
 
     `engine='persistent'` routes each bucket through the lane-refill work
@@ -427,10 +699,54 @@ def run(g: CSRGraph, *, global_red: bool = True, dynamic_red: bool = True,
                    bucket_sizes=bucket_sizes, max_x_rows=max_x_rows,
                    split_threshold=split_threshold)
     cfg = EngineConfig(dynamic_red=dynamic_red, backend=backend,
-                       out_cap=out_cap if enumerate_cliques else 0)
+                       out_cap=out_cap if enumerate_cliques else 0,
+                       steal=steal, window_steps=window_steps)
     total = MCEResult(cliques=len(prep.pre_reported), calls=0, branches=0,
                       sum_px=0, pre_reported=len(prep.pre_reported),
                       enumerated=list(prep.pre_reported) if enumerate_cliques else None)
+    if engine == "persistent":
+        # bucket-spanning path: consecutive same-shape buckets share one
+        # lane state (run_stream_persistent) — no drain at their boundary
+        slabs = [tuple(jnp.asarray(x) for x in
+                       (b.a, b.p0, b.x_rows, b.x_alive0, b.rsz0))
+                 for b in prep.buckets]
+        outs, spans = run_stream_persistent(slabs, cfg, lanes=lanes)
+        prefix = np.cumsum([0] + [b.num_roots for b in prep.buckets])
+        total.stats = dict(iters=0, live_iters=0, lane_iters=0, steals=0,
+                           entry_terms=0, spans=len(spans))
+        for out, (lo, hi) in zip(outs, spans):
+            out = jax.tree.map(np.asarray, out)
+            total.stats["iters"] += int(out["iters"])
+            total.stats["live_iters"] += int(out["live_iters"])
+            # carry is per-lane, so its leading dim is this span's lanes
+            total.stats["lane_iters"] += (int(out["iters"])
+                                          * int(out["calls"].shape[0]))
+            total.stats["steals"] += int(out["steals"])
+            total.stats["entry_terms"] += int(out["entry_terms"])
+            total.cliques += int(out["cliques"].sum())
+            # padded no-op roots (compile-count hygiene) are one call each
+            total.calls += (int(out["calls"].sum())
+                            - sum(b.n_pad for b in prep.buckets[lo:hi]))
+            total.branches += int(out["branches"].sum())
+            total.sum_px += int(out["sum_px"].sum())
+            total.iters_exhausted |= bool(out["truncated"].any())
+            if enumerate_cliques:
+                total.overflow |= bool(out["overflow"].any())
+                # out_root carries the stream-global root index; decode it
+                # back to (bucket, local root) via the slab prefix sums
+                for l in range(out["out_n"].shape[0]):
+                    for k in range(int(out["out_n"][l])):
+                        r = int(out["out_root"][l, k])
+                        bi = int(np.searchsorted(prefix, r,
+                                                 side="right")) - 1
+                        bucket = prep.buckets[bi]
+                        rloc = r - int(prefix[bi])
+                        uni = bucket.universes[rloc]
+                        base = [int(b) for b in bucket.bases[rloc]]
+                        members = _unpack_bits_np(out["out_rows"][l, k])
+                        total.enumerated.append(frozenset(
+                            base + [int(uni[m]) for m in members]))
+        return total
     for bucket in prep.buckets:
         args = (jnp.asarray(bucket.a), jnp.asarray(bucket.p0),
                 jnp.asarray(bucket.x_rows), jnp.asarray(bucket.x_alive0),

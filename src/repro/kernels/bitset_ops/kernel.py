@@ -48,6 +48,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_BLOCK_K = 256
@@ -315,3 +316,224 @@ def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray,
         interpret=interpret,
     )(rows, masks)
     return out[:m, :k]
+
+
+# ===========================================================================
+# dfs_step_window — K fused BK frame-steps with the top-T stack frames in
+# VMEM scratch (DESIGN.md §2.6/§3)
+# ===========================================================================
+
+# Literal VMEM scratch geometry for the stack window. The scratch shapes
+# must be (8, 128)-aligned literals (mce_lint R3): 8 frames × 128 words
+# bounds the eligible problem at U ≤ 4096 vertices per root universe.
+WINDOW_FRAMES = 8
+WINDOW_WORDS = 128
+
+
+def _dfs_step_window_kernel(a_ref, xr_ref, eye_ref, alive_ref,
+                            winp_ref, winb_ref, winxp_ref, winrb_ref,
+                            winrsz_ref, dloc_ref,
+                            outp_ref, outb_ref, outxp_ref, outrb_ref,
+                            outrsz_ref, ctl_ref,
+                            sp_ref, sb_ref, sxp_ref, srb_ref, srsz_ref,
+                            *, steps):
+    """One invocation = up to `steps` masked DFS frame-steps.
+
+    The window frames live in VMEM scratch for the whole invocation (the
+    per-frame |R| sizes and the control scalars ride in SMEM); the HBM
+    stack is untouched until the engine wrapper writes the returned
+    window back. Every reduction accumulates in f32 (Mosaic has no
+    integer-axis reductions; counts < 2^24 are exact) and argmax/first-bit
+    selections use the f32 min/max-of-masked-iota idiom so tie-breaking
+    matches jnp.argmax (first occurrence wins) bit-for-bit.
+    """
+    t, w = winp_ref.shape
+    u = a_ref.shape[0]
+    xc = xr_ref.shape[0]
+    sp_ref[:, :w] = winp_ref[...]
+    sb_ref[:, :w] = winb_ref[...]
+    sxp_ref[:, :w] = winxp_ref[...]
+    srb_ref[:, :w] = winrb_ref[...]
+    for i in range(t):
+        srsz_ref[i] = winrsz_ref[0, i]
+    a = a_ref[...]
+    xr = xr_ref[...]
+    eye = eye_ref[...]
+    alive0 = alive_ref[...].astype(jnp.float32)            # (XC, 1)
+    big = jnp.float32(1e9)
+    iw_f = jax.lax.broadcasted_iota(jnp.float32, (1, w), 1)
+    iw_i = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)
+    iu_f = jax.lax.broadcasted_iota(jnp.float32, (u, 1), 0)
+    ix_f = jax.lax.broadcasted_iota(jnp.float32, (xc, 1), 0)
+
+    def pcsum(x):
+        return jnp.sum(jax.lax.population_count(x).astype(jnp.float32),
+                       axis=1, keepdims=True)
+
+    def step(_, s):
+        dl, done, calls, branches, spx, clq, sdone = s
+        d = jnp.clip(dl, 0, t - 1)
+        fP = sp_ref[pl.ds(d, 1), :w]                       # (1, w)
+        fB = sb_ref[pl.ds(d, 1), :w]
+        fXp = sxp_ref[pl.ds(d, 1), :w]
+        fRb = srb_ref[pl.ds(d, 1), :w]
+        frsz = srsz_ref[d]
+        has_branch = jnp.max(jnp.where(fB != 0, 1.0, 0.0)) > 0.5
+        blocked = has_branch & (dl >= t - 1)
+        act = (done == 0) & ~blocked & (dl >= 0)
+        done = jnp.where(blocked | (dl < 0), jnp.int32(1), done)
+
+        # first set bit of B: per-word low-bit position, f32 min over words
+        low = jnp.bitwise_and(fB, jnp.uint32(0) - fB)
+        pos = jax.lax.population_count(
+            low - jnp.uint32(1)).astype(jnp.float32)
+        cand = jnp.where(fB != 0, iw_f * 32.0 + pos, big)
+        wv = jnp.clip(jnp.min(cand), 0.0,
+                      jnp.float32(u - 1)).astype(jnp.int32)
+        wbit = jnp.where(iw_i == wv // 32,
+                         jnp.uint32(1) << (wv % 32).astype(jnp.uint32),
+                         jnp.uint32(0))
+        wrow = a_ref[pl.ds(wv, 1), :]
+        childP = jnp.bitwise_and(fP, wrow)
+        childXp = jnp.bitwise_and(fXp, wrow)
+        childRb = jnp.bitwise_or(fRb, wbit)
+
+        deg = pcsum(jnp.bitwise_and(a, childP))            # (u, 1)
+        # gather-free P ∪ X membership: one-hot rows AND the member bitset
+        inpool = pcsum(jnp.bitwise_and(
+            eye, jnp.bitwise_or(childP, childXp))) > 0.5
+        pcx = pcsum(jnp.bitwise_and(xr, childP))           # (xc, 1)
+        # closed-form alive set from Rb (see ref.dfs_step_window); pcsum
+        # of x&Rb never exceeds |Rb|, so >= |Rb|−0.5 is exactly ==
+        pc_rb = jnp.sum(jax.lax.population_count(
+            childRb).astype(jnp.float32))
+        alive = jnp.where(
+            (alive0 > 0.5) & (pcsum(jnp.bitwise_and(xr, childRb))
+                              >= pc_rb - 0.5), 1.0, 0.0)
+
+        # enter_call, restricted: counts + leaf report + pivot branch set
+        en = act & has_branch
+        en_i = en.astype(jnp.int32)
+        branches = branches + en_i
+        calls = calls + en_i
+        pc_p = jnp.sum(jax.lax.population_count(
+            childP).astype(jnp.float32))
+        pc_x = jnp.sum(jax.lax.population_count(
+            childXp).astype(jnp.float32))
+        nal = jnp.sum(alive)
+        spx = spx + (pc_p + pc_x + nal).astype(jnp.int32) * en_i
+        p_empty = pc_p < 0.5
+        x_empty = (nal < 0.5) & (pc_x < 0.5)
+        crsz = frsz + 1
+        clq = clq + (p_empty & x_empty & (crsz >= 2) & en).astype(jnp.int32)
+        push = ~p_empty & en
+
+        su_s = jnp.where(inpool, deg, -1.0)
+        su = jnp.max(su_s)
+        best_u = jnp.min(jnp.where(su_s == su, iu_f, big)).astype(jnp.int32)
+        sx_s = jnp.where(alive > 0.5, pcx, -1.0)
+        sx = jnp.max(sx_s)
+        best_x = jnp.min(jnp.where(sx_s == sx, ix_f, big)).astype(jnp.int32)
+        use_x = sx > su
+        rowu = a_ref[pl.ds(best_u, 1), :]
+        rowx = xr_ref[pl.ds(jnp.clip(best_x, 0, xc - 1), 1), :]
+        pivot_row = jnp.where(use_x, rowx, rowu)
+        childB = jnp.bitwise_and(childP, jnp.bitwise_not(pivot_row))
+
+        # current frame: P \ w, X ∪ w, B \ w (identity when not branching)
+        nwbit = jnp.bitwise_not(wbit)
+        sp_ref[pl.ds(d, 1), :w] = jnp.where(
+            en, jnp.bitwise_and(fP, nwbit), fP)
+        sxp_ref[pl.ds(d, 1), :w] = jnp.where(
+            en, jnp.bitwise_or(fXp, wbit), fXp)
+        sb_ref[pl.ds(d, 1), :w] = jnp.where(
+            en, jnp.bitwise_and(fB, nwbit), fB)
+        # child frame at d+1 (clamped; identity unless descended into)
+        cd = jnp.clip(d + 1, 0, t - 1)
+        sp_ref[pl.ds(cd, 1), :w] = jnp.where(
+            push, childP, sp_ref[pl.ds(cd, 1), :w])
+        sb_ref[pl.ds(cd, 1), :w] = jnp.where(
+            push, childB, sb_ref[pl.ds(cd, 1), :w])
+        sxp_ref[pl.ds(cd, 1), :w] = jnp.where(
+            push, childXp, sxp_ref[pl.ds(cd, 1), :w])
+        srb_ref[pl.ds(cd, 1), :w] = jnp.where(
+            push, childRb, srb_ref[pl.ds(cd, 1), :w])
+        srsz_ref[cd] = jnp.where(push, crsz, srsz_ref[cd])
+
+        dl = jnp.where(act,
+                       jnp.where(has_branch,
+                                 jnp.where(push, dl + 1, dl), dl - 1), dl)
+        sdone = sdone + act.astype(jnp.int32)
+        return dl, done, calls, branches, spx, clq, sdone
+
+    z = jnp.int32(0)
+    s = jax.lax.fori_loop(0, steps, step,
+                          (dloc_ref[0, 0], z, z, z, z, z, z))
+    outp_ref[...] = sp_ref[:, :w]
+    outb_ref[...] = sb_ref[:, :w]
+    outxp_ref[...] = sxp_ref[:, :w]
+    outrb_ref[...] = srb_ref[:, :w]
+    for i in range(t):
+        outrsz_ref[0, i] = srsz_ref[i]
+    ctl_ref[0, 0] = s[0]
+    ctl_ref[0, 1] = s[2]
+    ctl_ref[0, 2] = s[3]
+    ctl_ref[0, 3] = s[4]
+    ctl_ref[0, 4] = s[5]
+    ctl_ref[0, 5] = s[6]
+    ctl_ref[0, 6] = z
+    ctl_ref[0, 7] = z
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
+def dfs_step_window(a: jnp.ndarray, x_rows: jnp.ndarray, eye: jnp.ndarray,
+                    alive0: jnp.ndarray, winP: jnp.ndarray,
+                    winB: jnp.ndarray, winXp: jnp.ndarray,
+                    winRb: jnp.ndarray, winrsz: jnp.ndarray,
+                    dloc: jnp.ndarray, steps: int = 16,
+                    interpret: bool = True):
+    """Pallas path for ref.dfs_step_window (same contract).
+
+    The (T, W) window frames are copied into VMEM scratch once, mutated
+    in place across up to `steps` frame-steps, and written back to the
+    output refs at the end — the kernel's whole point is that the stack
+    state does NOT round-trip HBM between steps. The adjacency, X rows,
+    eye, and alive inputs stay resident in VMEM across the invocation;
+    the |R| sizes and control scalars (dloc in, ctl out) ride in SMEM.
+    """
+    t, w = winP.shape
+    assert t == WINDOW_FRAMES, f"window must have {WINDOW_FRAMES} frames"
+    assert w <= WINDOW_WORDS, f"word width {w} exceeds {WINDOW_WORDS}"
+    u = a.shape[0]
+    xc = x_rows.shape[0]
+
+    def vmem(shape):
+        return pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    outs = pl.pallas_call(
+        functools.partial(_dfs_step_window_kernel, steps=steps),
+        out_shape=(jax.ShapeDtypeStruct((t, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((t, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((t, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((t, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((1, t), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 8), jnp.int32)),
+        in_specs=[vmem((u, w)), vmem((xc, w)), vmem((u, w)),
+                  vmem((xc, 1)), vmem((t, w)), vmem((t, w)),
+                  vmem((t, w)), vmem((t, w)), smem, smem],
+        out_specs=(vmem((t, w)), vmem((t, w)), vmem((t, w)), vmem((t, w)),
+                   smem, smem),
+        scratch_shapes=[
+            pltpu.VMEM((8, 128), jnp.uint32),
+            pltpu.VMEM((8, 128), jnp.uint32),
+            pltpu.VMEM((8, 128), jnp.uint32),
+            pltpu.VMEM((8, 128), jnp.uint32),
+            pltpu.SMEM((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, x_rows, eye, alive0.astype(jnp.int32)[:, None], winP, winB,
+      winXp, winRb, winrsz.astype(jnp.int32)[None],
+      jnp.asarray(dloc, jnp.int32)[None, None])
+    outP, outB, outXp, outRb, outrsz, ctl = outs
+    return outP, outB, outXp, outRb, outrsz[0], ctl[0]

@@ -95,6 +95,15 @@ def main() -> None:
                          "auto: per-bucket choice from the root-cost skew")
     ap.add_argument("--lanes", type=int, default=64,
                     help="persistent engine: resident DFS lanes per shard")
+    ap.add_argument("--no-steal", dest="steal", action="store_false",
+                    help="persistent engine: disable lane work-stealing "
+                         "(idle lanes adopting half of the deepest live "
+                         "lane's shallowest splittable branch set)")
+    ap.add_argument("--window-steps", type=int, default=0,
+                    help="fuse this many DFS frame-steps per device "
+                         "dispatch over a VMEM-resident stack window "
+                         "(0 = one step per dispatch; pivot backend with "
+                         "--no-dynamic-red only)")
     args = ap.parse_args()
 
     g = parse_graph(args.graph)
@@ -102,7 +111,8 @@ def main() -> None:
     t0 = time.time()
     drv = DistributedMCE(
         g, chunk=args.chunk, ckpt_path=args.ckpt,
-        cfg=EngineConfig(dynamic_red=args.dred, backend=args.backend),
+        cfg=EngineConfig(dynamic_red=args.dred, backend=args.backend,
+                         steal=args.steal, window_steps=args.window_steps),
         global_red=args.gred, x_red=args.xred,
         streaming=not args.materialize, stream_roots=args.stream_roots,
         split_threshold=args.split_threshold,
@@ -133,6 +143,9 @@ def main() -> None:
     if lc.get("lane_iters"):
         print(f"lane occupancy: {lc['live_iters'] / lc['lane_iters']:.2f} "
               f"(live {lc['live_iters']} / capacity {lc['lane_iters']})")
+    if lc.get("steals") or lc.get("entry_terms"):
+        print(f"queue: steals={lc.get('steals', 0)} "
+              f"entry_terms={lc.get('entry_terms', 0)}")
 
 
 if __name__ == "__main__":

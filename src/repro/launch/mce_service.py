@@ -52,6 +52,7 @@ class MCEService:
         self.lanes = lanes
         self.queries = 0
         self.stats = {"live_iters": 0, "lane_iters": 0, "truncated": 0,
+                      "steals": 0, "entry_terms": 0,
                       "engine_choices": {"perroot": 0, "persistent": 0}}
 
     def occupancy(self) -> float:
@@ -90,9 +91,11 @@ class MCEService:
         res = drv.run(resume=resume)
         self.queries += 1
         delta = {k: int(drv.last_counters.get(k, 0))
-                 for k in ("live_iters", "lane_iters", "truncated")}
+                 for k in ("live_iters", "lane_iters", "truncated",
+                           "steals", "entry_terms")}
         delta["engine_choices"] = dict(drv.stats["engine_choices"])
-        for k in ("live_iters", "lane_iters", "truncated"):
+        for k in ("live_iters", "lane_iters", "truncated",
+                  "steals", "entry_terms"):
             self.stats[k] += delta[k]
         for k, v in delta["engine_choices"].items():
             self.stats["engine_choices"][k] += v

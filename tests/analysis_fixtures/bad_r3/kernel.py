@@ -7,6 +7,7 @@ popcount output) and block shapes whose trailing dims are neither
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _degree_kernel(rows_ref, mask_ref, deg_ref):
@@ -25,3 +26,22 @@ def degrees(rows, mask):
         out_shape=jax.ShapeDtypeStruct((k, 1), jnp.int32),
         out_specs=pl.BlockSpec((8, 1), lambda i: (i, 0)),
     )(rows, mask)
+
+
+def _windowed_kernel(rows_ref, out_ref, acc_ref, stats_ref):
+    acc_ref[...] = rows_ref[...]
+    out_ref[...] = acc_ref[...]
+
+
+def windowed(rows, t):
+    k, w = rows.shape
+    return pl.pallas_call(
+        _windowed_kernel,
+        in_specs=[pl.BlockSpec((k, w), lambda: (0, 0))],
+        out_shape=jax.ShapeDtypeStruct((k, w), jnp.uint32),
+        out_specs=pl.BlockSpec((k, w), lambda: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8, 100), jnp.uint32),   # EXPECT-R3
+            pltpu.VMEM((t, 128), jnp.uint32),   # EXPECT-R3
+        ],
+    )(rows)

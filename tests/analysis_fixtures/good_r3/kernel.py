@@ -1,7 +1,9 @@
-"""R3 good twin: f32 accumulation (exact below 2^24) + aligned blocks."""
+"""R3 good twin: f32 accumulation (exact below 2^24), aligned blocks,
+literal (8, 128)-aligned VMEM scratch (SMEM scalar scratch is exempt)."""
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _degree_kernel(rows_ref, mask_ref, deg_ref):
@@ -20,3 +22,22 @@ def degrees(rows, mask):
         out_shape=jax.ShapeDtypeStruct((k, 1), jnp.int32),
         out_specs=pl.BlockSpec((8, 1), lambda i: (i, 0)),
     )(rows, mask)
+
+
+def _windowed_kernel(rows_ref, out_ref, acc_ref, idx_ref):
+    acc_ref[...] = rows_ref[...]
+    out_ref[...] = acc_ref[...]
+
+
+def windowed(rows):
+    k, w = rows.shape
+    return pl.pallas_call(
+        _windowed_kernel,
+        in_specs=[pl.BlockSpec((k, w), lambda: (0, 0))],
+        out_shape=jax.ShapeDtypeStruct((k, w), jnp.uint32),
+        out_specs=pl.BlockSpec((k, w), lambda: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8, 128), jnp.uint32),   # resident window: literal
+            pltpu.SMEM((8,), jnp.int32),        # scalar memory: exempt
+        ],
+    )(rows)

@@ -126,3 +126,40 @@ def test_lower_vmapped_frame_step():
                                                    interpret=False)),
         _rand((B, K, W), 20), _rand((B, W), 21), _rand((B, W), 22),
         _rand((B, W), 23))
+
+
+# ---------------------------------------------------------------------------
+# dfs_step_window: the fused VMEM stack-window kernel (plain + vmapped)
+# ---------------------------------------------------------------------------
+
+def _window_args(batch=None):
+    """One plausible window invocation (U=64 vertices, 2 words, 8 frames)."""
+    rng = np.random.default_rng(11)
+    u, w, xc, t = 64, 2, 24, 8
+    from repro.core.engine import frames as fr
+    a = _rand((u, w), 11)
+    xr = _rand((xc, w), 12)
+    eye = fr.eye_bits(u, w)
+    alive0 = jnp.asarray((rng.random(xc) < 0.5).astype(np.int32))
+    winP = _rand((t, w), 13)
+    zeros = jnp.zeros((t, w), jnp.uint32)
+    winrsz = jnp.zeros((t,), jnp.int32)
+    dloc = jnp.int32(0)
+    args = (a, xr, eye, alive0, winP, zeros, zeros, zeros, winrsz, dloc)
+    if batch is None:
+        return args
+    return tuple(x if i == 2 else jnp.stack([x] * batch)
+                 for i, x in enumerate(args))
+
+
+def test_lower_dfs_step_window():
+    _lower_tpu(lambda *a: bk.dfs_step_window(*a, steps=16, interpret=False),
+               *_window_args())
+
+
+def test_lower_vmapped_dfs_step_window():
+    # the engine vmaps run_root over a bucket; eye is shared (in_axes=None)
+    f = lambda *a: bk.dfs_step_window(*a, steps=16, interpret=False)
+    _lower_tpu(
+        jax.vmap(f, in_axes=(0, 0, None, 0, 0, 0, 0, 0, 0, 0)),
+        *_window_args(batch=2))

@@ -19,7 +19,8 @@ from repro.core import oracle
 from repro.core.driver import DistributedMCE
 from repro.core.engine import (EngineConfig, PrepStream, choose_engine,
                                estimate_costs, prepare, run, run_bucket,
-                               run_bucket_persistent)
+                               run_bucket_persistent,
+                               run_stream_persistent)
 from repro.launch.mce_service import MCEService
 from repro.graph import generators as gen
 from repro.graph.csr import from_edge_list
@@ -353,5 +354,256 @@ def test_midqueue_elastic_restart_persistent(tmp_path):
         assert res.cliques == ref.cliques
         assert res.calls == ref.calls
         assert not res.iters_exhausted
+    """, devices=2)
+    assert "CLIQUES" in out2
+
+
+# ---------------------------------------------------------------------------
+# Bucket-spanning stream + lane work stealing (DESIGN.md §2.6 STEAL)
+# ---------------------------------------------------------------------------
+
+def plant_hub(g, blob=18, p=0.85, seed=17):
+    """Densify the first `blob` vertices of an existing graph into a
+    near-clique hub (same recipe as skewed_graph, applied in place)."""
+    rng = np.random.default_rng(seed)
+    extra = [(i, j) for i in range(blob) for j in range(i + 1, blob)
+             if rng.random() < p]
+    e = np.concatenate([g.edges().astype(np.int64),
+                        np.array(extra, np.int64)])
+    key = e[:, 0] * g.n + e[:, 1]
+    e = e[np.unique(key, return_index=True)[1]]
+    return from_edge_list(g.n, e)
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_stream_spanning_matches_perroot_on_hub_graphs(gname):
+    """Multi-bucket stream with a planted hub: the spanning engine (lane
+    state carried across same-shape bucket boundaries, steals on) must
+    reproduce the per-root counters exactly."""
+    g = plant_hub(GRAPHS[gname]())
+    ref = run(g, bucket_sizes=(32, 64), engine="perroot")
+    res = run(g, bucket_sizes=(32, 64), engine="persistent", lanes=8)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    assert res.cliques == len(oracle.bk_pivot(g))
+    assert res.stats["spans"] >= 1
+    assert not res.iters_exhausted
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_stream_spanning_enumerates_same_sets_on_hub_graphs(gname):
+    """Enumerated-set parity through the stream-global out_root decode:
+    lanes cross bucket boundaries mid-subtree and may adopt stolen branch
+    sets, so each emitted clique's root index must still decode to the
+    right (bucket, local root) universe."""
+    g = plant_hub(GRAPHS[gname]())
+    ref = run(g, enumerate_cliques=True, bucket_sizes=(32, 64),
+              engine="perroot")
+    res = run(g, enumerate_cliques=True, bucket_sizes=(32, 64),
+              engine="persistent", lanes=6)
+    assert not res.overflow and not ref.overflow
+    assert set(res.enumerated) == set(ref.enumerated)
+    assert set(res.enumerated) == set(oracle.bk_pivot(g))
+
+
+def test_steal_on_off_parity_and_steal_counter():
+    """Stealing is pure scheduling: identical counters either way, with
+    the steal counter live on the hub fixture and pinned to zero off."""
+    # blob=40/p=0.6: big enough that graph reduction does not collapse
+    # the hub, so idle lanes really do adopt stolen branch sets
+    g = skewed_graph(blob=40, p=0.6)
+    on = run(g, bucket_sizes=(64,), engine="persistent", lanes=8,
+             steal=True)
+    off = run(g, bucket_sizes=(64,), engine="persistent", lanes=8,
+              steal=False)
+    assert (on.cliques, on.calls, on.branches, on.sum_px) == \
+           (off.cliques, off.calls, off.branches, off.sum_px)
+    assert on.cliques == len(oracle.bk_pivot(g))
+    assert on.stats["steals"] > 0
+    assert off.stats["steals"] == 0
+
+
+def test_steal_enumerates_same_sets():
+    g = skewed_graph(blob=40, p=0.6)
+    on = run(g, enumerate_cliques=True, bucket_sizes=(64,),
+             engine="persistent", lanes=8, steal=True)
+    off = run(g, enumerate_cliques=True, bucket_sizes=(64,),
+              engine="persistent", lanes=8, steal=False)
+    assert not on.overflow and not off.overflow
+    assert set(on.enumerated) == set(off.enumerated)
+    assert set(on.enumerated) == set(oracle.bk_pivot(g))
+
+
+def test_hybrid_entry_terms_counted_in_refill():
+    """Hybrid early termination inside the persistent refill: dense-blob
+    roots complete within their entry call and must be tallied."""
+    g = GRAPHS["caveman"]()
+    ref = run(g, backend="hybrid", engine="perroot")
+    res = run(g, backend="hybrid", engine="persistent", lanes=8)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    assert res.stats["entry_terms"] > 0
+
+
+# ---------------------------------------------------------------------------
+# run_stream_persistent: span formation and the stream-global root index
+# ---------------------------------------------------------------------------
+
+def test_stream_persistent_single_span_across_same_shape_slabs():
+    """Two same-shape slabs form ONE span: no drain at their boundary,
+    and the merged counters match the single-bucket reference."""
+    g = GRAPHS["er"]()
+    args = _bucket_args(g)
+    h = args[0].shape[0] // 2
+    slab1 = tuple(x[:h] for x in args)
+    slab2 = tuple(x[h:] for x in args)
+    outs, spans = run_stream_persistent([slab1, slab2], EngineConfig(),
+                                        lanes=4)
+    assert spans == [(0, 2)]
+    ref = run_bucket(*args, EngineConfig())
+    for k in ("cliques", "calls", "branches", "sum_px"):
+        assert int(outs[0][k].sum()) == int(ref[k].sum()), k
+    assert int(outs[0]["truncated"]) == 0
+
+
+def test_stream_persistent_shape_change_flushes_span():
+    """A shape change must flush the open span (different frame shapes
+    cannot share one compiled loop); the per-span outputs still sum to
+    the per-slab reference."""
+    g = gen.erdos_renyi(150, 0.4, seed=3)
+    prep = prepare(g, bucket_sizes=(32, 64))
+    slabs = [tuple(jnp.asarray(x) for x in
+                   (b.a, b.p0, b.x_rows, b.x_alive0, b.rsz0))
+             for b in prep.buckets]
+    sigs = [(s[0].shape[1], s[0].shape[2], s[2].shape[1]) for s in slabs]
+    assert len(set(sigs)) >= 2, "fixture must mix bucket shapes"
+    outs, spans = run_stream_persistent(slabs, EngineConfig(), lanes=8)
+    # spans tile [0, len(slabs)) contiguously, one per run of equal sigs
+    assert spans[0][0] == 0 and spans[-1][1] == len(slabs)
+    for (alo, ahi), (blo, bhi) in zip(spans, spans[1:]):
+        assert ahi == blo
+    for lo, hi in spans:
+        assert len({sigs[i] for i in range(lo, hi)}) == 1
+    want = 0
+    for s in slabs:
+        out = run_bucket_persistent(*s, EngineConfig(),
+                                    lanes=min(8, s[0].shape[0]))
+        want += int(out["cliques"].sum())
+    assert sum(int(o["cliques"].sum()) for o in outs) == want
+
+
+def test_stream_persistent_out_root_is_stream_global():
+    """Enumeration across a span boundary: out_root must index into the
+    whole stream (slab prefix sums), not restart at 0 per slab."""
+    g = GRAPHS["ba"]()
+    args = _bucket_args(g)
+    r = args[0].shape[0]
+    h = r // 2
+    slab1 = tuple(x[:h] for x in args)
+    slab2 = tuple(x[h:] for x in args)
+    cfg = EngineConfig(out_cap=2048)
+    outs, spans = run_stream_persistent([slab1, slab2], cfg, lanes=4)
+    assert spans == [(0, 2)]
+    out = jax.tree.map(np.asarray, outs[0])
+    assert not out["overflow"].any()
+    roots = {int(out["out_root"][l, k])
+             for l in range(out["out_n"].shape[0])
+             for k in range(int(out["out_n"][l]))}
+    assert roots and all(0 <= x < r for x in roots)
+    assert max(roots) >= h, "second slab's cliques must carry global ids"
+
+
+# ---------------------------------------------------------------------------
+# VMEM stack windowing: run_root_windowed parity through run()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("steps", [4, 16])
+def test_windowed_walk_matches_plain(gname, steps):
+    """window_steps routes eligible per-root walks (pivot, dynamic_red
+    off, counting only) through dfs_step_window; counters must be
+    identical to the plain one-step-per-HBM-round-trip walk."""
+    g = GRAPHS[gname]()
+    ref = run(g, dynamic_red=False, engine="perroot")
+    res = run(g, dynamic_red=False, engine="perroot", window_steps=steps)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+    assert res.cliques == len(oracle.bk_pivot(g))
+
+
+def test_window_gate_ignores_ineligible_configs():
+    """window_steps with dynamic reduction on (outside the dfs_step_window
+    contract) must silently take the plain walk — same counters."""
+    g = GRAPHS["er"]()
+    ref = run(g, engine="perroot")
+    res = run(g, engine="perroot", window_steps=16)
+    assert (res.cliques, res.calls, res.branches, res.sum_px) == \
+           (ref.cliques, ref.calls, ref.branches, ref.sum_px)
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream elastic restart (4 -> 2 shards) through a bucket boundary
+# with steals in flight
+# ---------------------------------------------------------------------------
+
+# indented to match the f-string bodies below: run_py dedents the
+# concatenation, so both halves must share one indentation level
+_HUB_GRAPH_SRC = """
+        import numpy as np
+        from repro.graph import barabasi_albert
+        from repro.graph.csr import from_edge_list
+        _g = barabasi_albert(300, 3, seed=7)
+        _rng = np.random.default_rng(7)
+        _extra = [(i, j) for i in range(24) for j in range(i + 1, 24)
+                  if _rng.random() < 0.7]
+        _e = np.concatenate([_g.edges().astype(np.int64),
+                             np.array(_extra, np.int64)])
+        _key = _e[:, 0] * 300 + _e[:, 1]
+        _e = _e[np.unique(_key, return_index=True)[1]]
+        g = from_edge_list(300, _e)
+"""
+
+
+def test_midstream_elastic_restart_with_steals(tmp_path):
+    """Preempt the persistent driver mid-stream under 4 shards — past a
+    bucket-size boundary, on the hub fixture so steals are in flight —
+    then resume under 2: the elastic cursor must land on exactly the
+    remaining roots, and the settled steal counter must show the queue
+    actually stole across the run."""
+    ck = str(tmp_path / "spanning.json")
+    out4 = run_py(_HUB_GRAPH_SRC + f"""
+        from repro.core.driver import DistributedMCE
+        drv = DistributedMCE(g, chunk=16, ckpt_path={ck!r},
+                             bucket_sizes=(32, 64), stream_roots=64,
+                             engine="persistent", lanes=8)
+        n = 0
+        orig = drv._run_chunk
+        def failing(*args):
+            global n
+            if n >= 3: raise RuntimeError("preempted")
+            n += 1
+            return orig(*args)
+        drv._run_chunk = failing
+        try:
+            drv.run()
+        except RuntimeError:
+            pass
+        print("PARTIAL_OK")
+    """, devices=4)
+    assert "PARTIAL_OK" in out4
+    out2 = run_py(_HUB_GRAPH_SRC + f"""
+        from repro.core.driver import DistributedMCE
+        from repro.core import bitset_engine
+        ref = bitset_engine.run(g, bucket_sizes=(32, 64))
+        drv = DistributedMCE(g, chunk=16, ckpt_path={ck!r},
+                             bucket_sizes=(32, 64), stream_roots=64,
+                             engine="persistent", lanes=8)
+        res = drv.run(resume=True)
+        print("CLIQUES", res.cliques, ref.cliques)
+        print("STEALS", int(drv.last_counters.get("steals", 0)))
+        assert res.cliques == ref.cliques
+        assert res.calls == ref.calls
+        assert not res.iters_exhausted
+        assert int(drv.last_counters.get("steals", 0)) > 0
     """, devices=2)
     assert "CLIQUES" in out2
