@@ -27,7 +27,12 @@ R3 (Mosaic compilability): flag
   back (the PR-1 review fix);
 * `pl.BlockSpec` shapes built from literals whose trailing dims are
   neither (8, 128)-multiples nor 1 (1 ~ "equals the array dim", which
-  is legal; non-literal dims are shape-dependent and skipped);
+  is legal; non-literal dims are shape-dependent and skipped; specs
+  whose `memory_space=` names SMEM are skipped — Mosaic applies the
+  last-two-dims rule to SMEM blocks too, but their legality there
+  hinges on "equals the array dims", which this static pass cannot see.
+  The lane-batched kernels' per-lane scalar rows satisfy it by carrying
+  a middle singleton: (1, 1, K) blocks of (L, 1, K) arrays);
 * `pltpu.VMEM` scratch entries in `scratch_shapes` whose trailing dims
   are not (8, 128)-aligned *literals*. Scratch has no backing array to
   borrow dims from, so the BlockSpec "equals the array dim" escape does
@@ -402,6 +407,9 @@ def check_blockspecs(mod: Module) -> List[Finding]:
         if not (isinstance(node, ast.Call) and
                 name_endswith(node, "BlockSpec") and node.args):
             continue
+        mem = _kw(node, "memory_space")
+        if mem is not None and "SMEM" in ast.unparse(mem):
+            continue                  # SMEM is scalar memory: no tiling
         shape = node.args[0]
         if not isinstance(shape, (ast.Tuple, ast.List)) or len(shape.elts) < 2:
             continue

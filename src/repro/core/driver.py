@@ -40,8 +40,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import (BACKENDS, EngineConfig, MCEResult,
-                               PreparedMCE, PrepStream, RootBucket,
-                               choose_engine, estimate_costs,
+                               PIVOT_BACKENDS, PreparedMCE, PrepStream,
+                               RootBucket, choose_engine, estimate_costs,
                                root_cost_skew, run_bucket_persistent,
                                run_root)
 from repro.graph.csr import CSRGraph
@@ -54,12 +54,16 @@ from repro.sharding.compat import shard_map
 # equivalent is Σ per-root iters over max(iters)·lanes — the lock-step vmap
 # runs every lane until the slowest root finishes, which is exactly the
 # idle time the persistent queue reclaims (surfaced per query through
-# MCEService.stats). "steals"/"entry_terms" only move on the persistent
-# engine (adopted branch-set halves and claims that finished inside their
-# entry call); the perroot path zero-fills them so the counter schema —
-# and every checkpoint written against it — is engine-independent.
+# MCEService.stats). "steals"/"entry_terms"/"window_spills"/"window_hits"
+# only move on the persistent engine (adopted branch-set halves, claims
+# that finished inside their entry call, and windowed trips that stopped
+# at a window boundary vs ran fully VMEM-resident); the perroot path
+# zero-fills them so the counter schema — and every checkpoint written
+# against it — is engine-independent. Checkpoints from before a key
+# existed resume via `.get` in `_settle`.
 COUNTER_KEYS = ("cliques", "calls", "branches", "sum_px", "truncated",
-                "live_iters", "lane_iters", "steals", "entry_terms")
+                "live_iters", "lane_iters", "steals", "entry_terms",
+                "window_spills", "window_hits")
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +136,10 @@ def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
             L = min(lanes, a_s.shape[1])
             out = run_bucket_persistent(
                 a_s[0], p_s[0], xr_s[0], xa_s[0], rz_s[0], cfg, lanes=L)
-            out = dict(out, lane_iters=out["iters"] * L)
+            # each windowed trip offers up to window_steps frame-steps
+            # per lane, so the occupancy denominator scales with it
+            spt = max(1, cfg.window_steps)
+            out = dict(out, lane_iters=out["iters"] * L * spt)
         else:
             out = jax.vmap(lambda aa, pp, rr, ll, zz: run_root(
                 aa, pp, rr, ll, zz, cfg))(
@@ -141,7 +148,9 @@ def _sharded_counts_impl(a, p0, xr, xa, rz, cfg: EngineConfig, mesh: Mesh,
             # vmap lane spins until the slowest root's DFS exhausts
             out = dict(out, live_iters=jnp.sum(out["iters"]),
                        lane_iters=jnp.max(out["iters"]) * a_s.shape[1],
-                       steals=jnp.int32(0), entry_terms=jnp.int32(0))
+                       steals=jnp.int32(0), entry_terms=jnp.int32(0),
+                       window_spills=jnp.int32(0),
+                       window_hits=jnp.int32(0))
         sums = {k: jnp.sum(out[k]).astype(jnp.int32)[None]
                 for k in COUNTER_KEYS}
         return sums
@@ -350,9 +359,10 @@ class DistributedMCE:
                 # the skew memo avoids re-deriving costs on cached replays;
                 # the choice is a pure function of the bucket, so replays
                 # and resumes land on the same engine
-                eng_b, lanes_b = choose_engine(skew=bucket.cost_skew,
-                                               n_roots=total,
-                                               lanes=self.lanes)
+                eng_b, lanes_b = choose_engine(
+                    skew=bucket.cost_skew, n_roots=total, lanes=self.lanes,
+                    steal=bool(self.cfg.steal)
+                    and self.cfg.backend in PIVOT_BACKENDS)
                 self.stats["engine_choices"][eng_b] += 1
             done = state.roots_done if b == state.bucket else 0
             while done < total:

@@ -123,6 +123,36 @@ def dfs_step_window(a: jnp.ndarray, x_rows: jnp.ndarray, eye: jnp.ndarray,
                                winRb, winrsz, dloc, steps)
 
 
+def dfs_step_window_lanes(a: jnp.ndarray, x_rows: jnp.ndarray,
+                          eye: jnp.ndarray, alive0: jnp.ndarray,
+                          winP: jnp.ndarray, winB: jnp.ndarray,
+                          winXp: jnp.ndarray, winRb: jnp.ndarray,
+                          winrsz: jnp.ndarray, dloc: jnp.ndarray,
+                          steps: int):
+    """Lane-batched window walk for the persistent engine: each of the L
+    lanes runs up to `steps` fused BK frame-steps over its own resident
+    T-frame stack window (pivot backend, dynamic reduction off, counting
+    only — same eligibility as `dfs_step_window`).
+
+    a: (L, U, W); x_rows: (L, XC, W); eye: (U, W) shared; alive0:
+    (L, XC); windows (L, T, W); winrsz (L, T); dloc (L,) with dloc < 0
+    marking a dead lane (no-op, zero deltas). Returns the updated
+    windows plus ctl (L, 8) int32 = [dloc', calls, branches, sum_px,
+    cliques, steps_done, 0, 0] per lane. On TPU this is one grid-over-
+    lanes Pallas kernel (per-lane VMEM scratch window, per-lane scalars
+    in 2-D SMEM); elsewhere a vmapped jnp window walk with the same
+    contract."""
+    if (_on_tpu() and a.ndim == 3 and winP.shape[1] == WINDOW_FRAMES
+            and a.shape[2] <= WINDOW_MAX_WORDS
+            and x_rows.shape[1] <= WINDOW_MAX_XROWS):
+        return kernel.dfs_step_window_lanes(a, x_rows, eye, alive0, winP,
+                                            winB, winXp, winRb, winrsz,
+                                            dloc, steps=steps,
+                                            interpret=False)
+    return ref.dfs_step_window_lanes(a, x_rows, eye, alive0, winP, winB,
+                                     winXp, winRb, winrsz, dloc, steps)
+
+
 def frame_step(rows: jnp.ndarray, p: jnp.ndarray, xp: jnp.ndarray,
                wrow: jnp.ndarray):
     """Fused BK frame step: (childp, childxp, deg, partner).

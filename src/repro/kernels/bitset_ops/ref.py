@@ -224,6 +224,31 @@ def dfs_step_window(a: jnp.ndarray, x_rows: jnp.ndarray, eye: jnp.ndarray,
     return s[0], s[1], s[2], s[3], s[4], ctl
 
 
+def dfs_step_window_lanes(a: jnp.ndarray, x_rows: jnp.ndarray,
+                          eye: jnp.ndarray, alive0: jnp.ndarray,
+                          winP: jnp.ndarray, winB: jnp.ndarray,
+                          winXp: jnp.ndarray, winRb: jnp.ndarray,
+                          winrsz: jnp.ndarray, dloc: jnp.ndarray,
+                          steps: int):
+    """Lane-batched `dfs_step_window`: one independent window walk per lane.
+
+    a: (L, U, W) per-lane adjacency; x_rows: (L, XC, W); eye: (U, W)
+    shared; alive0: (L, XC) int32 0/1 per-lane root alive masks;
+    winP/winB/winXp/winRb: (L, T, W); winrsz: (L, T); dloc: (L,) int32.
+    Returns the lane-batched windows plus ctl (L, 8) int32 rows of the
+    single-lane contract. A dead lane (dloc < 0) no-ops: its first body
+    evaluation marks it done, so it returns unchanged with zero counter
+    deltas and steps_done 0. Lanes are independent — one lane stopping on
+    underflow/overflow only masks its own updates (the vmapped while_loop
+    keeps stepping the others), so a blocked lane never stalls its
+    neighbors' progress.
+    """
+    return jax.vmap(
+        lambda a_l, xr_l, al_l, wp, wb, wxp, wrb, wrz, dl: dfs_step_window(
+            a_l, xr_l, eye, al_l, wp, wb, wxp, wrb, wrz, dl, steps)
+    )(a, x_rows, alive0, winP, winB, winXp, winRb, winrsz, dloc)
+
+
 def and_popcount_many(rows: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
     """One row matrix against a batch of masks.
 

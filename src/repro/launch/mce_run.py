@@ -97,13 +97,21 @@ def main() -> None:
                     help="persistent engine: resident DFS lanes per shard")
     ap.add_argument("--no-steal", dest="steal", action="store_false",
                     help="persistent engine: disable lane work-stealing "
-                         "(idle lanes adopting half of the deepest live "
-                         "lane's shallowest splittable branch set)")
+                         "(idle lanes adopting half of a victim lane's "
+                         "shallowest splittable branch set)")
+    ap.add_argument("--steal-victim", choices=("branchiest", "deepest"),
+                    default="branchiest",
+                    help="steal victim policy: 'branchiest' picks the lane "
+                         "with the largest donation-slot branch set, "
+                         "'deepest' the legacy deepest lane (pure "
+                         "scheduling — counters/sets bit-identical)")
     ap.add_argument("--window-steps", type=int, default=0,
-                    help="fuse this many DFS frame-steps per device "
-                         "dispatch over a VMEM-resident stack window "
-                         "(0 = one step per dispatch; pivot backend with "
-                         "--no-dynamic-red only)")
+                    help="walk this many DFS frame-steps per stack "
+                         "round-trip over a VMEM-resident stack window "
+                         "(0 = one step per trip). Per-root walks need "
+                         "pivot + --no-dynamic-red; the persistent engine "
+                         "windows every config (fused kernel when "
+                         "eligible, windowed dfs_step otherwise)")
     args = ap.parse_args()
 
     g = parse_graph(args.graph)
@@ -112,7 +120,8 @@ def main() -> None:
     drv = DistributedMCE(
         g, chunk=args.chunk, ckpt_path=args.ckpt,
         cfg=EngineConfig(dynamic_red=args.dred, backend=args.backend,
-                         steal=args.steal, window_steps=args.window_steps),
+                         steal=args.steal, steal_victim=args.steal_victim,
+                         window_steps=args.window_steps),
         global_red=args.gred, x_red=args.xred,
         streaming=not args.materialize, stream_roots=args.stream_roots,
         split_threshold=args.split_threshold,
@@ -146,6 +155,11 @@ def main() -> None:
     if lc.get("steals") or lc.get("entry_terms"):
         print(f"queue: steals={lc.get('steals', 0)} "
               f"entry_terms={lc.get('entry_terms', 0)}")
+    wtrips = lc.get("window_spills", 0) + lc.get("window_hits", 0)
+    if wtrips:
+        print(f"window: spills={lc['window_spills']} "
+              f"hits={lc['window_hits']} "
+              f"boundary_stall={lc['window_spills'] / wtrips:.2f}")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,24 @@ def _windowed_kernel(rows_ref, out_ref, acc_ref, stats_ref):
     out_ref[...] = acc_ref[...]
 
 
+def _lanes_kernel(rows_ref, rsz_ref, out_ref):
+    out_ref[0] = rows_ref[0] + rsz_ref[0, 0]
+
+
+def lanes(rows, rsz):
+    # per-lane scalar row WITHOUT memory_space=SMEM: the (1, 8) literal
+    # block lands in VMEM where the 128-multiple tiling rule applies
+    l, k, w = rows.shape
+    return pl.pallas_call(
+        _lanes_kernel,
+        grid=(l,),
+        in_specs=[pl.BlockSpec((1, k, w), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, 8), lambda i: (i, 0))],  # EXPECT-R3
+        out_shape=jax.ShapeDtypeStruct((l, k, w), jnp.int32),
+        out_specs=pl.BlockSpec((1, k, w), lambda i: (i, 0, 0)),
+    )(rows, rsz)
+
+
 def windowed(rows, t):
     k, w = rows.shape
     return pl.pallas_call(

@@ -29,6 +29,36 @@ def _windowed_kernel(rows_ref, out_ref, acc_ref, idx_ref):
     out_ref[...] = acc_ref[...]
 
 
+def _lanes_kernel(rows_ref, rsz_ref, out_ref, ctl_ref, acc_ref, loc_ref):
+    acc_ref[...] = rows_ref[0]
+    out_ref[0] = acc_ref[...]
+    ctl_ref[0, 0, 0] = rsz_ref[0, 0, 0]
+
+
+def lanes(rows, rsz):
+    l, k, w = rows.shape
+    return pl.pallas_call(
+        _lanes_kernel,
+        grid=(l,),
+        in_specs=[pl.BlockSpec((1, k, w), lambda i: (i, 0, 0)),
+                  # per-lane scalar row: Mosaic checks the LAST TWO block
+                  # dims even in SMEM, so the lane axis is the mapped
+                  # leading dim and the trailing (1, 8) block matches the
+                  # (l, 1, 8) array's trailing dims exactly
+                  pl.BlockSpec((1, 1, 8), lambda i: (i, 0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_shape=(jax.ShapeDtypeStruct((l, k, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((l, 1, 8), jnp.int32)),
+        out_specs=(pl.BlockSpec((1, k, w), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1, 1, 8), lambda i: (i, 0, 0),
+                                memory_space=pltpu.SMEM)),
+        scratch_shapes=[
+            pltpu.VMEM((8, 128), jnp.uint32),   # per-lane resident window
+            pltpu.SMEM((8,), jnp.int32),
+        ],
+    )(rows, rsz)
+
+
 def windowed(rows):
     k, w = rows.shape
     return pl.pallas_call(

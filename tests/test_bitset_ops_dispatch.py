@@ -522,3 +522,66 @@ def test_dispatch_dfs_step_window(monkeypatch):
     big[3] = jnp.zeros(ops.WINDOW_MAX_XROWS + 1, jnp.int32)
     ops.dfs_step_window(*big, steps=4)
     assert calls == []
+
+
+# --------------------------------------------------------------------------
+# dfs_step_window_lanes: grid-over-lanes window walk (the persistent
+# engine's batched form — one Pallas grid step per lane)
+# --------------------------------------------------------------------------
+
+def _lanes_case(nlanes=4, seed=200):
+    """Stack independent single-lane window cases; lane 2 starts dead
+    (dloc = -1), the engine's idle-lane shape the kernel must no-op."""
+    cases = [_window_case(seed + i) for i in range(nlanes)]
+    eye = cases[0][2]
+    stacked = [jnp.stack([c[i] for c in cases])
+               for i in range(10) if i != 2]
+    a, xr, alive0, wp, wb, wxp, wrb, wrsz, dl = stacked
+    dl = dl.at[2].set(-1)
+    return (a, xr, eye, alive0, wp, wb, wxp, wrb, wrsz, dl)
+
+
+@pytest.mark.parametrize("steps", [1, 9, 32])
+def test_dfs_step_window_lanes_parity(steps):
+    """Kernel vs vmapped ref, bit-exact per lane — including the dead
+    lane, which must return unchanged with zero counter deltas."""
+    args = _lanes_case()
+    want = ref.dfs_step_window_lanes(*args, steps)
+    got = bk.dfs_step_window_lanes(*args, steps=steps, interpret=True)
+    for i, (g, r) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                      err_msg=f"output {i}")
+    ctl = np.asarray(got[-1])
+    assert ctl[2, 0] == -1                       # dead lane stays dead
+    assert (ctl[2, 1:6] == 0).all()              # ...with zero deltas
+
+
+def test_dispatch_dfs_step_window_lanes(monkeypatch):
+    """On TPU a lane-batched (L, 8, <=128)-word window routes to the grid
+    kernel; CPU and oversized operands take the vmapped ref path."""
+    args = _lanes_case(nlanes=3, seed=300)
+    want = ref.dfs_step_window_lanes(*args, 4)
+
+    got = ops.dfs_step_window_lanes(*args, steps=4)   # CPU -> ref
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    calls = []
+
+    def fake(*a, steps, interpret):
+        calls.append((steps, interpret))
+        return ref.dfs_step_window_lanes(*a, steps)
+
+    monkeypatch.setattr(ops.kernel, "dfs_step_window_lanes", fake)
+    got = ops.dfs_step_window_lanes(*args, steps=4)
+    assert calls == [(4, False)]
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+    calls.clear()                              # too many X rows -> ref
+    big = list(args)
+    big[1] = jnp.zeros((3, ops.WINDOW_MAX_XROWS + 1, 2), jnp.uint32)
+    big[3] = jnp.zeros((3, ops.WINDOW_MAX_XROWS + 1), jnp.int32)
+    ops.dfs_step_window_lanes(*big, steps=4)
+    assert calls == []

@@ -163,3 +163,33 @@ def test_lower_vmapped_dfs_step_window():
     _lower_tpu(
         jax.vmap(f, in_axes=(0, 0, None, 0, 0, 0, 0, 0, 0, 0)),
         *_window_args(batch=2))
+
+
+# ---------------------------------------------------------------------------
+# dfs_step_window_lanes: the grid-over-lanes window kernel the persistent
+# engine dispatches (plain + vmapped, eye shared)
+# ---------------------------------------------------------------------------
+
+def _lanes_args(nlanes=4, batch=None):
+    args = _window_args()
+    lanes = tuple(x if i == 2 else jnp.stack([x] * nlanes)
+                  for i, x in enumerate(args))
+    if batch is None:
+        return lanes
+    return tuple(x if i == 2 else jnp.stack([x] * batch)
+                 for i, x in enumerate(lanes))
+
+
+def test_lower_dfs_step_window_lanes():
+    _lower_tpu(
+        lambda *a: bk.dfs_step_window_lanes(*a, steps=16, interpret=False),
+        *_lanes_args())
+
+
+def test_lower_vmapped_dfs_step_window_lanes():
+    # shard_map/vmap over device shards batches the lane axis; eye stays
+    # shared (in_axes=None), same as the engine's call pattern
+    f = lambda *a: bk.dfs_step_window_lanes(*a, steps=16, interpret=False)
+    _lower_tpu(
+        jax.vmap(f, in_axes=(0, 0, None, 0, 0, 0, 0, 0, 0, 0)),
+        *_lanes_args(batch=2))
